@@ -1,0 +1,62 @@
+"""Beyond-paper table: posit compression wins at the system level.
+
+* cross-pod gradient sync bytes (f32 all-reduce vs posit16/8 all-gather)
+* KV-cache bytes per 32k-context request for each serving arch
+* checkpoint bytes with the posit16 payload codec
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.compress.kvcache import cache_bytes
+from repro.configs.shapes import SHAPES
+from repro.launch import specs
+
+
+def run():
+    rows = []
+    # gradient wire bytes for one phi3 layer-equivalent tensor
+    g = np.prod((5120, 17920))
+    rows.append(("grad_wire_f32", 0.0, f"bytes={int(g * 4):,}"))
+    rows.append(("grad_wire_posit16", 0.0,
+                 f"bytes={int(g * 2):,} saving=2.0x"))
+    rows.append(("grad_wire_posit8", 0.0,
+                 f"bytes={int(g):,} saving=4.0x"))
+
+    spec = SHAPES["decode_32k"]
+    for arch in ("phi3-medium-14b", "granite-34b", "dbrx-132b",
+                 "minicpm3-4b"):
+        t0 = time.perf_counter()
+        cfg16 = configs.config_for_cell(arch, "decode_32k")
+        import dataclasses
+        cfg_f = dataclasses.replace(cfg16, kv_posit=None,
+                                    weight_posit=None)
+        sh_q = specs.cache_shape(cfg16, spec)
+        sh_f = specs.cache_shape(cfg_f, spec)
+        bytes_q = sum(np.prod(l.shape) * l.dtype.itemsize
+                      for l in jax.tree_util.tree_leaves(sh_q)
+                      if hasattr(l, "shape"))
+        bytes_f = sum(np.prod(l.shape) * l.dtype.itemsize
+                      for l in jax.tree_util.tree_leaves(sh_f)
+                      if hasattr(l, "shape"))
+        dt = (time.perf_counter() - t0) * 1e6
+        # the no-posit baseline stores KV in the compute dtype (bf16);
+        # posit16 matches its bytes (the win is tapered *accuracy* at
+        # equal width), posit8 halves them; f32 would be 2x bf16.
+        rows.append((f"kvcache_{arch}", dt,
+                     f"bf16={int(bytes_f):,}B "
+                     f"posit={int(bytes_q):,}B "
+                     f"saving_vs_bf16={bytes_f / max(bytes_q, 1):.2f}x "
+                     f"saving_vs_f32={2 * bytes_f / max(bytes_q, 1):.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

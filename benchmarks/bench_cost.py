@@ -1,0 +1,64 @@
+"""Paper Table IV analogue: per-op hardware cost.
+
+LUT counts do not exist on TPU; the cost metrics that do are HLO FLOPs,
+bytes accessed, and wall time per element (CPU interpret — directional
+only).  Reported per PVU op and for the three Pallas kernels.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import posit as P
+from repro.core.types import POSIT16, POSIT32
+from repro.kernels import ops
+
+
+def _cost(fn, *args):
+    jitted = jax.jit(fn)
+    c = jitted.lower(*args).compile().cost_analysis()
+    t0 = time.perf_counter()
+    jax.block_until_ready(jitted(*args))
+    t1 = time.perf_counter()
+    jax.block_until_ready(jitted(*args))
+    dt = (time.perf_counter() - t1) * 1e6
+    return c.get("flops", 0.0), c.get("bytes accessed", 0.0), dt
+
+
+def run(n: int = 1 << 16, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 2 ** 32, n, dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2 ** 32, n, dtype=np.uint32))
+    rows = []
+    for name, fn in [
+        ("pvu_add", lambda x, y: P.vpadd(x, y, POSIT32)),
+        ("pvu_mul", lambda x, y: P.vpmul(x, y, POSIT32)),
+        ("pvu_div_nr3", lambda x, y: P.vpdiv(x, y, POSIT32, mode="nr3")),
+        ("pvu_div_exact",
+         lambda x, y: P.vpdiv(x, y, POSIT32, mode="exact")),
+    ]:
+        fl, by, dt = _cost(fn, a, b)
+        rows.append((name, dt, f"flops={fl:.3g} bytes={by:.3g} "
+                     f"ns_per_elt={dt * 1e3 / n:.1f}"))
+
+    a2 = a.reshape(256, -1)
+    b2 = b.reshape(256, -1)
+    fl, by, dt = _cost(lambda x, y: P.vpdot(x, y, POSIT32), a2, b2)
+    rows.append(("pvu_dot", dt, f"flops={fl:.3g} bytes={by:.3g}"))
+
+    x = jnp.asarray(rng.standard_normal((512, 512)).astype(np.float32))
+    fl, by, dt = _cost(lambda t: ops.quantize(t, POSIT16), x)
+    rows.append(("kernel_codec_quant", dt, f"flops={fl:.3g} bytes={by:.3g}"))
+    w = ops.quantize(x, POSIT16)
+    fl, by, dt = _cost(lambda t, ww: ops.gemm(t, ww, POSIT16), x, w)
+    rows.append(("kernel_posit_gemm", dt, f"flops={fl:.3g} bytes={by:.3g}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,97 @@
+"""Paper Figs. 5/6 analogue: DNN inference accuracy, posit vs FP32.
+
+Deep-PeNSieve methodology: train a small MLP classifier in FP32, then run
+inference with all weights+activations passed through the posit codec
+(posit16 / posit32) and compare top-1 accuracy.  Datasets are synthetic
+class-cluster problems of MNIST-like shape (offline container — noted in
+DESIGN.md §8); the claim under test is the *relative* ordering
+posit32 ~ posit16 ~ FP32 at matched task difficulty.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant_dequant
+from repro.core.types import POSIT8, POSIT16, POSIT32
+
+
+def make_dataset(rng, n_class=10, dim=64, n_per=200, spread=1.6):
+    centers = rng.standard_normal((n_class, dim)) * 2.0
+    xs, ys = [], []
+    for c in range(n_class):
+        xs.append(centers[c] + rng.standard_normal((n_per, dim)) * spread)
+        ys.append(np.full(n_per, c))
+    x = np.concatenate(xs).astype(np.float32)
+    y = np.concatenate(ys).astype(np.int32)
+    perm = rng.permutation(len(x))
+    return x[perm], y[perm]
+
+
+def train_mlp(x, y, hidden=128, steps=300, lr=0.05, seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(k)
+    dim, n_class = x.shape[1], int(y.max()) + 1
+    params = {
+        "w1": jax.random.normal(k1, (dim, hidden)) * dim ** -0.5,
+        "b1": jnp.zeros(hidden),
+        "w2": jax.random.normal(k2, (hidden, n_class)) * hidden ** -0.5,
+        "b2": jnp.zeros(n_class),
+    }
+    xj, yj = jnp.asarray(x), jnp.asarray(y)
+
+    def loss_fn(p):
+        h = jax.nn.relu(xj @ p["w1"] + p["b1"])
+        logits = h @ p["w2"] + p["b2"]
+        return -jnp.take_along_axis(
+            jax.nn.log_softmax(logits), yj[:, None], 1).mean()
+
+    @jax.jit
+    def step(p):
+        g = jax.grad(loss_fn)(p)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    for _ in range(steps):
+        params = step(params)
+    return params
+
+
+def accuracy(params, x, y, codec=None):
+    q = (lambda t: quant_dequant(t, codec)) if codec else (lambda t: t)
+    p = jax.tree.map(q, params)
+    h = jax.nn.relu(q(x @ p["w1"] + p["b1"]))
+    logits = q(h @ p["w2"] + p["b2"])
+    return float((jnp.argmax(logits, -1) == y).mean())
+
+
+def run(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for name, spread in [("easy-mnist-like", 2.5),
+                         ("fashion-like", 3.5),
+                         ("svhn-like", 4.5),
+                         ("cifar-like", 5.5)]:
+        x, y = make_dataset(rng, spread=spread)
+        n_train = int(0.8 * len(x))
+        params = train_mlp(x[:n_train], y[:n_train], seed=seed)
+        xt = jnp.asarray(x[n_train:])
+        yt = jnp.asarray(y[n_train:])
+        t0 = time.perf_counter()
+        acc32 = accuracy(params, xt, yt, None)
+        accp32 = accuracy(params, xt, yt, POSIT32)
+        accp16 = accuracy(params, xt, yt, POSIT16)
+        accp8 = accuracy(params, xt, yt, POSIT8)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((f"dnn_{name}", dt,
+                     f"fp32={acc32:.4f} posit32={accp32:.4f} "
+                     f"posit16={accp16:.4f} posit8={accp8:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,0 +1,66 @@
+"""Roofline table generator: reads experiments/dryrun/*.json and renders
+the EXPERIMENTS.md §Roofline table (per arch x shape x mesh: the three
+terms, the dominant bottleneck, MODEL_FLOPS ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(directory=DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def render_markdown(recs, mesh="16x16"):
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant |"
+        " peak GiB/dev | useful-FLOP ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {})
+        ratio = r.get("useful_flop_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(rf['compute_s'])} | "
+            f"{_fmt_s(rf['memory_s'])} | {_fmt_s(rf['collective_s'])} | "
+            f"**{rf['dominant']}** | "
+            f"{mem.get('peak_bytes_per_device', 0) / 2**30:.2f} | "
+            f"{ratio:.3f} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - |")
+    return "\n".join(lines)
+
+
+def run():
+    recs = load_records()
+    ok = [r for r in recs if r.get("ok")]
+    rows = [("roofline_cells_ok", 0.0, f"count={len(ok)}")]
+    for r in ok:
+        rf = r["roofline"]
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+            f"dom={rf['dominant']} compute={rf['compute_s']:.3g}s "
+            f"mem={rf['memory_s']:.3g}s coll={rf['collective_s']:.3g}s"))
+    return rows
+
+
+if __name__ == "__main__":
+    print(render_markdown(load_records()))

@@ -1,0 +1,30 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (harness contract).
+  python -m benchmarks.run            # all
+  python -m benchmarks.run accuracy   # one suite
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_accuracy, bench_compression, bench_cost,
+                            bench_dnn_accuracy, roofline)
+    suites = {
+        "accuracy": bench_accuracy.run,        # paper §VI table
+        "dnn": bench_dnn_accuracy.run,         # paper Figs 5/6
+        "cost": bench_cost.run,                # paper Table IV analogue
+        "compression": bench_compression.run,  # beyond-paper systems wins
+        "roofline": roofline.run,              # §Roofline summary
+    }
+    wanted = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in wanted:
+        for row in suites[name]():
+            print(",".join(str(x) for x in row), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""End-to-end training driver: a small LM on this repo's own text.
+
+Uses the full framework stack: config -> model (reduced gemma family) ->
+deterministic byte-level pipeline over README/DESIGN docs -> AdamW (with
+posit16 moments) -> supervised loop with async checkpoints + resume +
+straggler watchdog.  Loss must drop substantially within a few hundred
+steps.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import glob
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import train as train_main  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="gemma-7b")
+    args = ap.parse_args()
+
+    # build a self-contained corpus out of the repo's documentation
+    root = os.path.join(os.path.dirname(__file__), "..")
+    corpus = "/tmp/repro_corpus.txt"
+    with open(corpus, "w") as out:
+        for pattern in ("*.md", "src/repro/core/*.py"):
+            for path in sorted(glob.glob(os.path.join(root, pattern))):
+                out.write(open(path).read())
+
+    losses = train_main.main([
+        "--arch", args.arch, "--reduced",
+        "--steps", str(args.steps),
+        "--batch", "16", "--seq", "128",
+        "--data", "bytes", "--corpus", corpus,
+        "--lr", "1e-3", "--posit-moments",
+        "--ckpt-dir", "/tmp/repro_train_lm_ckpt",
+        "--save-every", "100",
+    ])
+    first = sum(losses[:10]) / 10
+    last = sum(losses[-10:]) / 10
+    print(f"mean loss first-10={first:.3f} last-10={last:.3f}")
+    assert last < first * 0.8, "loss did not improve"
+    print("OK: model learned")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Posit KV-cache quantization utilities (serving memory/bandwidth).
+
+The models quantize/dequantize inline (see ``models/*.py``); these helpers
+quantize an *existing* cache tree (e.g. after prefill in f32) and report
+compression ratios for the benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.convert import f32_to_posit, posit_to_f32
+from .gradient import pcfg_of
+
+
+def quantize_cache(cache, name: str):
+    cfg = pcfg_of(name)
+
+    def one(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return f32_to_posit(x.astype(jnp.float32), cfg)
+        return x                                   # lengths / ints
+
+    return jax.tree.map(one, cache)
+
+
+def dequantize_cache(cache, name: str):
+    cfg = pcfg_of(name)
+
+    def one(x):
+        if jnp.issubdtype(x.dtype, jnp.unsignedinteger):
+            return posit_to_f32(x, cfg)
+        return x
+
+    return jax.tree.map(one, cache)
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

@@ -1,0 +1,53 @@
+"""Assigned-architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+from . import (dbrx_132b, gemma_7b, granite_34b, granite_moe_3b_a800m,
+               hymba_1_5b, internvl2_1b, minicpm3_4b, phi3_medium_14b,
+               rwkv6_7b, whisper_tiny)
+from .shapes import ALL_SHAPES, SHAPES, ShapeSpec
+
+_MODULES = {
+    "internvl2-1b": internvl2_1b,
+    "rwkv6-7b": rwkv6_7b,
+    "phi3-medium-14b": phi3_medium_14b,
+    "gemma-7b": gemma_7b,
+    "granite-34b": granite_34b,
+    "minicpm3-4b": minicpm3_4b,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m,
+    "dbrx-132b": dbrx_132b,
+    "hymba-1.5b": hymba_1_5b,
+    "whisper-tiny": whisper_tiny,
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].CONFIG
+
+
+def supported_shapes(arch: str):
+    return _MODULES[arch].SUPPORTED_SHAPES
+
+
+def config_for_cell(arch: str, shape: str) -> ModelConfig:
+    """Arch config adjusted for a dry-run cell (serving memory policy)."""
+    mod = _MODULES[arch]
+    cfg = mod.CONFIG
+    spec = SHAPES[shape]
+    if spec.kind == "decode":
+        overrides = getattr(mod, "SERVE_OVERRIDES",
+                            dict(kv_posit="posit16"))
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def all_cells():
+    """Every assigned (arch x shape) pair = the dry-run/roofline grid."""
+    for arch in ARCH_IDS:
+        for shape in supported_shapes(arch):
+            yield arch, shape

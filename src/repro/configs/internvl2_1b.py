@@ -1,0 +1,30 @@
+"""internvl2-1b [vlm]: InternViT + InternLM2 backbone [arXiv:2404.16821; hf].
+
+24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655.  The vision
+frontend is a STUB per the assignment: ``input_specs`` provides 256
+precomputed patch embeddings per sample, prepended to the text tokens.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="transformer",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab=151655,
+    act="silu",
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,          # internlm2-1.8b ties embeddings
+    n_visual_tokens=256,
+    compute_dtype="bfloat16",
+    grad_compress="posit16",
+    grad_accum=4,
+    seq_shard_activations=True,
+)
+
+# full attention -> long_500k skipped (DESIGN.md §4)
+SUPPORTED_SHAPES = ("train_4k", "prefill_32k", "decode_32k")

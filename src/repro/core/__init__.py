@@ -1,0 +1,15 @@
+"""repro.core — the PVU posit number system in JAX.
+
+Public surface: ``repro.core.posit`` (the vector ISA), ``PositConfig``,
+and the f32 converters.
+"""
+from .types import (POSIT8, POSIT8_E0, POSIT16, POSIT16_E1, POSIT32,
+                    PositConfig)
+from .convert import f32_to_posit, posit_to_f32, quant_dequant
+from .posit import vpadd, vpdiv, vpdot, vpmul, vpneg, vpsub
+
+__all__ = [
+    "PositConfig", "POSIT8", "POSIT8_E0", "POSIT16", "POSIT16_E1", "POSIT32",
+    "f32_to_posit", "posit_to_f32", "quant_dequant",
+    "vpadd", "vpsub", "vpmul", "vpdiv", "vpdot", "vpneg",
+]

@@ -1,0 +1,62 @@
+"""Portable bit primitives on uint32 lanes.
+
+These are the TPU-native stand-ins for the PVU's hardware submodules:
+
+* ``clz32``       — the paper's LZC (leading-zero-count) module, as a
+                    branch-free 5-stage binary search (``lax.clz`` does not
+                    lower inside Pallas TPU kernels, so we use the same
+                    portable formulation everywhere: core, refs, kernels).
+* ``sll``/``srl`` — total barrel shifts: well-defined for any amount,
+                    returning 0 once the amount reaches the width (XLA's
+                    native shift is undefined for amount >= bitwidth).
+
+All helpers take/return ``uint32`` arrays; shift amounts are ``int32``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+def u32(x):
+    return jnp.asarray(x, U32)
+
+
+def i32(x):
+    return jnp.asarray(x, I32)
+
+
+def sll(x, s):
+    """x << s with s in [0, 63]; 0 when s >= 32.  x: uint32, s: int32."""
+    x = u32(x)
+    s = i32(s)
+    amt = u32(jnp.clip(s, 0, 31))
+    return jnp.where((s >= 0) & (s < 32), x << amt, u32(0))
+
+
+def srl(x, s):
+    """Logical x >> s with s in [0, 63]; 0 when s >= 32."""
+    x = u32(x)
+    s = i32(s)
+    amt = u32(jnp.clip(s, 0, 31))
+    return jnp.where((s >= 0) & (s < 32), x >> amt, u32(0))
+
+
+def clz32(x):
+    """Count leading zeros of a uint32 (32 for x == 0).  Branch-free."""
+    x = u32(x)
+    is_zero = x == 0
+    n = jnp.zeros(x.shape, I32)
+    cur = x
+    for k in (16, 8, 4, 2, 1):
+        cond = cur < u32(1 << (32 - k))
+        n = n + jnp.where(cond, i32(k), i32(0))
+        cur = jnp.where(cond, cur << u32(k), cur)
+    return jnp.where(is_zero, i32(32), n)
+
+
+def parity_mask(cond):
+    """Boolean -> uint32 {0,1}."""
+    return jnp.where(cond, u32(1), u32(0))

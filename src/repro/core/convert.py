@@ -1,0 +1,87 @@
+"""Exact float32 <-> posit conversion (vectorized bit manipulation).
+
+These are the framework's quantize/dequantize primitives: gradients, weight
+tiles and KV-cache blocks cross the posit boundary through these two
+functions (or their Pallas kernel equivalents in ``repro.kernels``).
+
+Both directions are exactly rounded (RNE).  Conventions:
+  f32 NaN/Inf -> NaR;  NaR -> f32 NaN;  +/-0 -> posit 0 -> f32 +0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .bits import clz32, i32, sll, srl, u32
+from .pir import PIR, decode, encode
+from .types import PositConfig
+
+
+def f32_to_posit(x, cfg: PositConfig):
+    """float32 array -> posit patterns in ``cfg.storage_dtype``."""
+    # bitcast_convert_type (not .view) so the same code lowers in Pallas
+    bits = lax.bitcast_convert_type(jnp.asarray(x, jnp.float32), jnp.uint32)
+    sign = bits >> u32(31)
+    exp8 = (bits >> u32(23)) & u32(0xFF)
+    man = bits & u32(0x7FFFFF)
+
+    is_nar = exp8 == u32(255)                      # inf or nan
+    is_zero = (exp8 == 0) & (man == 0)
+
+    # normal numbers
+    exp_n = exp8.astype(jnp.int32) - 127
+    sig_n = u32(0x80000000) | (man << u32(8))
+
+    # subnormals: value = man * 2^-149; normalize via clz
+    sh = clz32(man)                                # >= 9 for nonzero man
+    sig_s = sll(man, sh)
+    exp_s = i32(-118) - sh
+
+    subnormal = (exp8 == 0) & (man != 0)
+    sig = jnp.where(subnormal, sig_s, sig_n)
+    exp = jnp.where(subnormal, exp_s, exp_n)
+
+    p = encode(sign, exp, sig, jnp.zeros_like(sign), is_zero, is_nar, cfg)
+    return p.astype(cfg.storage_dtype)
+
+
+def posit_to_f32(p, cfg: PositConfig):
+    """posit patterns -> float32, exactly rounded (RNE)."""
+    pir: PIR = decode(jnp.asarray(p).astype(jnp.uint32), cfg)
+    sign, exp, sig = pir.sign, pir.exp, pir.sig
+
+    # Uniform rounding: take the mantissa field as sig >> r, round at bit
+    # r-1, sticky below.  r = 8 emits a normal (hidden bit masked off);
+    # for exp < -126 the value is an f32 subnormal and r grows so the
+    # hidden bit lands *inside* the field.
+    is_sub = exp < i32(-126)
+    t = jnp.clip(-(exp + i32(118)), 9, 40)         # subnormal shift
+    r = jnp.where(is_sub, t, i32(8))
+
+    pre = srl(sig, r)
+    round_bit = srl(sig, r - 1) & u32(1)
+    mask = sll(u32(1), r - 1) - u32(1)             # r-1>=32 -> wraps to all-1s
+    sticky = jnp.where((sig & mask) != 0, u32(1), u32(0))
+
+    man = pre & u32(0x7FFFFF)
+    inc = round_bit & (sticky | (man & u32(1)))
+    man_r = man + inc
+    carry = (man_r >> u32(23)).astype(jnp.int32)
+    man_f = man_r & u32(0x7FFFFF)
+
+    exp_f = jnp.where(is_sub, i32(-127), exp) + carry
+    biased = exp_f + 127
+    overflow = biased > 254
+    biased = jnp.clip(biased, 0, 254)
+
+    out = (sign << u32(31)) | (biased.astype(jnp.uint32) << u32(23)) | man_f
+    inf = (sign << u32(31)) | u32(0x7F800000)
+    out = jnp.where(overflow, inf, out)
+    out = jnp.where(pir.is_zero, sign << u32(31), out)
+    out = jnp.where(pir.is_nar, u32(0x7FC00000), out)
+    return lax.bitcast_convert_type(out, jnp.float32)
+
+
+def quant_dequant(x, cfg: PositConfig):
+    """Round-trip f32 -> posit -> f32: the straight-through quantizer."""
+    return posit_to_f32(f32_to_posit(x, cfg), cfg)

@@ -1,0 +1,98 @@
+"""Public PVU vector API — the software surface of the paper's RVV ISA.
+
+The paper exposes five custom RVV instructions (Table II):
+``vpadd / vpsub / vpmul / vpdiv / vpdot``.  Here the same five operations
+are the public library API, operating on posit *pattern* arrays (uint8/
+uint16/uint32 depending on ``cfg.nbits``).  Each call is
+decode -> PIR compute -> single-rounding encode, exactly like one pass
+through the hardware pipeline of Fig. 3.
+
+All functions are jit-compatible, vectorized, and differentiable-free
+(integer domain); use ``repro.core.convert`` to cross into float land.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import arith, dot as dot_mod
+from .convert import f32_to_posit, posit_to_f32, quant_dequant  # re-export
+from .pir import decode, encode_pir
+from .types import (POSIT8, POSIT16, POSIT32, PositConfig)  # re-export
+
+__all__ = [
+    "vpadd", "vpsub", "vpmul", "vpdiv", "vpdot",
+    "f32_to_posit", "posit_to_f32", "quant_dequant",
+    "PositConfig", "POSIT8", "POSIT16", "POSIT32",
+]
+
+
+def _u(p):
+    return jnp.asarray(p).astype(jnp.uint32)
+
+
+def _pack(p, cfg: PositConfig):
+    return p.astype(cfg.storage_dtype)
+
+
+def vpadd(a, b, cfg: PositConfig = POSIT32):
+    pir, sticky = arith.vpadd(decode(_u(a), cfg), decode(_u(b), cfg), cfg)
+    return _pack(encode_pir(pir, cfg, sticky), cfg)
+
+
+def vpsub(a, b, cfg: PositConfig = POSIT32):
+    pir, sticky = arith.vpsub(decode(_u(a), cfg), decode(_u(b), cfg), cfg)
+    return _pack(encode_pir(pir, cfg, sticky), cfg)
+
+
+def vpmul(a, b, cfg: PositConfig = POSIT32):
+    pir, sticky = arith.vpmul(decode(_u(a), cfg), decode(_u(b), cfg), cfg)
+    return _pack(encode_pir(pir, cfg, sticky), cfg)
+
+
+def vpdiv(a, b, cfg: PositConfig = POSIT32, mode: str = "nr3"):
+    """mode='nr3' is the paper-faithful Newton-Raphson divider;
+    mode='exact' is the beyond-paper exactly-rounded divider."""
+    pir, sticky = arith.vpdiv(decode(_u(a), cfg), decode(_u(b), cfg), cfg,
+                              mode=mode)
+    return _pack(encode_pir(pir, cfg, sticky), cfg)
+
+
+def vpdot(a, b, cfg: PositConfig = POSIT32, axis: int = -1,
+          mode: str = "quire_lite"):
+    """Dot product along ``axis`` with a single final rounding (§IV-E).
+
+    mode='quire_lite' — 128-bit max-exponent-aligned accumulator (the
+        paper's CSA design, exact for spreads up to 95 bits);
+    mode='quire'      — the Posit Standard's exact 512-bit quire
+        (beyond paper; every in-range sum is exact).
+    """
+    da, db = decode(_u(a), cfg), decode(_u(b), cfg)
+    if mode == "quire":
+        pir, sticky = dot_mod.vpdot_quire(da, db, cfg, axis=axis)
+    else:
+        pir, sticky = dot_mod.vpdot(da, db, cfg, axis=axis)
+    return _pack(encode_pir(pir, cfg, sticky), cfg)
+
+
+def vpneg(a, cfg: PositConfig = POSIT32):
+    """Exact negation (two's complement of the pattern)."""
+    x = _u(a) & jnp.uint32(cfg.mask)
+    nar = jnp.uint32(cfg.nar_pattern)
+    out = jnp.where((x == 0) | (x == nar), x,
+                    (~x + jnp.uint32(1)) & jnp.uint32(cfg.mask))
+    return _pack(out, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block"))
+def posit_matmul(a_f32, w_patterns, cfg: PositConfig = POSIT16,
+                 block: int = 512):
+    """Reference posit-weight matmul: dequantize ``w`` then MXU matmul.
+
+    The fused-VMEM version lives in ``repro.kernels.posit_gemm``; this is
+    the semantically identical composition used on backends without Pallas.
+    """
+    w = posit_to_f32(w_patterns, cfg)
+    return jnp.dot(a_f32, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,87 @@
+"""Posit configuration types.
+
+The PVU paper parameterizes three things (``§IV``): the posit bit width
+``n``, the exponent field width ``es``, and the mantissa *alignment* width
+(the cap on alignment shifts in add/sub/dot).  ``PositConfig`` carries the
+same three parameters.  ``align_width=63`` (the full width of the emulated
+64-bit datapath) makes add/sub/mul exactly rounded; smaller values mimic a
+narrower hardware aligner.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PositConfig:
+    nbits: int = 32
+    es: int = 2
+    align_width: int = 63
+
+    def __post_init__(self):
+        if not (2 <= self.nbits <= 32):
+            raise ValueError(f"nbits must be in [2, 32], got {self.nbits}")
+        if not (0 <= self.es <= 4):
+            raise ValueError(f"es must be in [0, 4], got {self.es}")
+        if not (1 <= self.align_width <= 63):
+            raise ValueError("align_width must be in [1, 63]")
+
+    # ---- derived constants (python ints; used as compile-time scalars) ----
+    @property
+    def useed(self) -> int:
+        return 1 << (1 << self.es)
+
+    @property
+    def mask(self) -> int:
+        """Mask of the low ``nbits`` bits."""
+        return (1 << self.nbits) - 1 if self.nbits < 32 else 0xFFFFFFFF
+
+    @property
+    def nar_pattern(self) -> int:
+        return 1 << (self.nbits - 1)
+
+    @property
+    def maxpos_pattern(self) -> int:
+        return (1 << (self.nbits - 1)) - 1
+
+    @property
+    def minpos_pattern(self) -> int:
+        return 1
+
+    @property
+    def max_scale(self) -> int:
+        """Largest combined binary exponent (maxpos): (n-2) * 2^es."""
+        return (self.nbits - 2) << self.es
+
+    @property
+    def min_scale(self) -> int:
+        return -self.max_scale
+
+    @property
+    def max_frac_bits(self) -> int:
+        """Longest possible fraction field: n - 1 (sign) - 2 (min regime) - es."""
+        return max(0, self.nbits - 3 - self.es)
+
+    @property
+    def storage_dtype(self):
+        """Narrowest unsigned dtype that holds a pattern."""
+        if self.nbits <= 8:
+            return jnp.uint8
+        if self.nbits <= 16:
+            return jnp.uint16
+        return jnp.uint32
+
+    @property
+    def name(self) -> str:
+        return f"posit{self.nbits}e{self.es}"
+
+
+# The Posit Standard (2022) fixes es = 2; these are the configs the paper
+# evaluates (posit16 / posit32) plus a narrow one for aggressive compression.
+POSIT32 = PositConfig(32, 2)
+POSIT16 = PositConfig(16, 2)
+POSIT8 = PositConfig(8, 2)
+POSIT16_E1 = PositConfig(16, 1)
+POSIT8_E0 = PositConfig(8, 0)

@@ -1,0 +1,159 @@
+"""64-bit unsigned arithmetic emulated as (hi, lo) uint32 pairs.
+
+TPUs (and x64-disabled JAX) have no int64 datapath; the PVU RTL likewise
+composes its wide datapaths from 32-bit slices.  Everything here is
+branch-free and vectorizes over the VPU lanes.
+
+The multiplier is the TPU-native adaptation of the paper's radix-4 Booth
+multiplier + CSA tree: we decompose into 16-bit limbs (hardware-supported
+int multiplies) and recombine with explicit carries — the same
+"cheap partial products + carry-save recombination" insight, expressed in
+the units a TPU actually has.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .bits import U32, clz32, i32, sll, srl, u32
+
+
+class U64(NamedTuple):
+    hi: jnp.ndarray
+    lo: jnp.ndarray
+
+
+def make(hi, lo) -> U64:
+    return U64(u32(hi), u32(lo))
+
+
+def zeros_like(x: U64) -> U64:
+    return U64(jnp.zeros_like(x.hi), jnp.zeros_like(x.lo))
+
+
+def from32(lo) -> U64:
+    lo = u32(lo)
+    return U64(jnp.zeros_like(lo), lo)
+
+
+def add(a: U64, b: U64) -> U64:
+    lo = a.lo + b.lo
+    carry = jnp.where(lo < a.lo, u32(1), u32(0))
+    hi = a.hi + b.hi + carry
+    return U64(hi, lo)
+
+
+def sub(a: U64, b: U64) -> U64:
+    lo = a.lo - b.lo
+    borrow = jnp.where(a.lo < b.lo, u32(1), u32(0))
+    hi = a.hi - b.hi - borrow
+    return U64(hi, lo)
+
+
+def neg(a: U64) -> U64:
+    """Two's complement: 2^64 - a (mod 2^64)."""
+    return add(U64(~a.hi, ~a.lo), from32(u32(1)))
+
+
+def bor(a: U64, b: U64) -> U64:
+    return U64(a.hi | b.hi, a.lo | b.lo)
+
+
+def band(a: U64, b: U64) -> U64:
+    return U64(a.hi & b.hi, a.lo & b.lo)
+
+
+def shl(a: U64, s) -> U64:
+    """a << s, s in [0, 64); total (0 for s >= 64)."""
+    s = i32(s)
+    hi = sll(a.hi, s) | srl(a.lo, 32 - s) | sll(a.lo, s - 32)
+    lo = sll(a.lo, s)
+    return U64(hi, lo)
+
+
+def shr(a: U64, s) -> U64:
+    """Logical a >> s, s in [0, 64); total."""
+    s = i32(s)
+    lo = srl(a.lo, s) | sll(a.hi, 32 - s) | srl(a.hi, s - 32)
+    hi = srl(a.hi, s)
+    return U64(hi, lo)
+
+
+def shr_sticky(a: U64, s):
+    """(a >> s, sticky) where sticky=1 iff any shifted-out bit was set.
+
+    s in [0, 64); s >= 64 must be pre-clamped by the caller.
+    """
+    s = i32(s)
+    out = shr(a, s)
+    # bits shifted out = a & ((1 << s) - 1); compute the mask in u64.
+    mask = sub(shl(from32(u32(1)), s), from32(u32(1)))  # 2^s - 1 (s<64)
+    dropped = band(a, mask)
+    sticky = jnp.where((dropped.hi | dropped.lo) != 0, u32(1), u32(0))
+    return out, sticky
+
+
+def lt(a: U64, b: U64):
+    return (a.hi < b.hi) | ((a.hi == b.hi) & (a.lo < b.lo))
+
+
+def ge(a: U64, b: U64):
+    return ~lt(a, b)
+
+
+def eq(a: U64, b: U64):
+    return (a.hi == b.hi) & (a.lo == b.lo)
+
+
+def is_zero(a: U64):
+    return (a.hi | a.lo) == 0
+
+
+def select(cond, a: U64, b: U64) -> U64:
+    return U64(jnp.where(cond, a.hi, b.hi), jnp.where(cond, a.lo, b.lo))
+
+
+def clz64(a: U64):
+    return jnp.where(a.hi == 0, i32(32) + clz32(a.lo), clz32(a.hi))
+
+
+def bit(a: U64, pos) -> jnp.ndarray:
+    """Extract bit ``pos`` (0..63) as uint32 {0,1}."""
+    sh = shr(a, pos)
+    return sh.lo & u32(1)
+
+
+def mul_32x32(a, b) -> U64:
+    """Full 32x32 -> 64 product via 16-bit limb partial products.
+
+    This is the Booth-multiplier stand-in (see module docstring).
+    """
+    a = u32(a)
+    b = u32(b)
+    a0 = a & u32(0xFFFF)
+    a1 = a >> u32(16)
+    b0 = b & u32(0xFFFF)
+    b1 = b >> u32(16)
+    p00 = a0 * b0
+    p01 = a0 * b1
+    p10 = a1 * b0
+    p11 = a1 * b1
+    mid = p01 + p10
+    mid_carry = jnp.where(mid < p01, u32(1), u32(0))  # wrapped past 2^32
+    lo = p00 + (mid << u32(16))
+    c1 = jnp.where(lo < p00, u32(1), u32(0))
+    hi = p11 + (mid >> u32(16)) + (mid_carry << u32(16)) + c1
+    return U64(hi, lo)
+
+
+def mul_64x32_hi64(t: U64, x):
+    """Return (t * x) >> 32 as U64 (truncating; error < 1 ulp of the result).
+
+    Used by the Newton-Raphson divider where a truncating recombination is
+    exactly what narrow hardware would do.
+    """
+    x = u32(x)
+    a = mul_32x32(t.hi, x)          # contributes at scale 2^32
+    b = mul_32x32(t.lo, x)          # contributes at scale 2^0
+    return add(a, from32(b.hi))     # (a << 32 + b) >> 32, dropping b.lo

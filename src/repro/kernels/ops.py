@@ -1,0 +1,85 @@
+"""Shape-polymorphic jit wrappers around the Pallas kernels.
+
+These are what the rest of the framework calls: they accept arbitrary
+array ranks, pad to tile boundaries, dispatch to the kernel, and undo the
+padding.  ``interpret`` defaults to True because this container is
+CPU-only; on a real TPU runtime pass ``interpret=False`` (the launcher
+flag ``--pallas=native`` does this).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PositConfig
+from . import posit_codec, posit_dot, posit_gemm
+
+
+def _as_2d(x):
+    """Flatten to (rows, cols) with cols = trailing dim (padded separately)."""
+    if x.ndim == 0:
+        return x.reshape(1, 1), x.shape
+    if x.ndim == 1:
+        return x.reshape(1, -1), x.shape
+    return x.reshape(-1, x.shape[-1]), x.shape
+
+
+def _pad_to(x, bm, bn):
+    m, n = x.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, m, n
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def quantize(x, cfg: PositConfig, interpret: bool = True):
+    """f32 array (any rank) -> posit patterns, via the codec kernel."""
+    x2, shape = _as_2d(jnp.asarray(x, jnp.float32))
+    bm, bn = posit_codec.DEFAULT_BLOCK
+    bm = min(bm, x2.shape[0])
+    bn = min(bn, x2.shape[1])
+    xp, m, n = _pad_to(x2, bm, bn)
+    out = posit_codec.quantize_2d(xp, cfg, block=(bm, bn),
+                                  interpret=interpret)
+    return out[:m, :n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def dequantize(p, cfg: PositConfig, interpret: bool = True):
+    """posit patterns (any rank) -> f32 array, via the codec kernel."""
+    p2, shape = _as_2d(jnp.asarray(p))
+    bm, bn = posit_codec.DEFAULT_BLOCK
+    bm = min(bm, p2.shape[0])
+    bn = min(bn, p2.shape[1])
+    pp, m, n = _pad_to(p2, bm, bn)
+    out = posit_codec.dequantize_2d(pp, cfg, block=(bm, bn),
+                                    interpret=interpret)
+    return out[:m, :n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def gemm(a, w_patterns, cfg: PositConfig, interpret: bool = True):
+    """f32 (..., K) @ posit (K, N) -> f32 (..., N)."""
+    a2, shape = _as_2d(jnp.asarray(a, jnp.float32))
+    k, n = w_patterns.shape
+    bm, bk, bn = posit_gemm.DEFAULT_BLOCKS
+    bm = min(bm, a2.shape[0])
+    bk = min(bk, k)
+    bn = min(bn, n)
+    ap, m, _ = _pad_to(a2, bm, bk)
+    wp, _, _ = _pad_to(w_patterns, bk, bn)
+    out = posit_gemm.posit_gemm(ap, wp, cfg, blocks=(bm, bk, bn),
+                                interpret=interpret)
+    return out[:m, :n].reshape(shape[:-1] + (n,))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def dot_rows(a_patterns, b_patterns, cfg: PositConfig,
+             interpret: bool = True):
+    """Bit-exact PVU dot product per row: (R, L) -> (R,)."""
+    return posit_dot.vpdot_rows(a_patterns, b_patterns, cfg,
+                                interpret=interpret)

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: the faithful PVU vpdot datapath (§IV-E).
+
+One pass of the paper's pipeline per row block, entirely in VMEM:
+decode -> elementwise significand multiply (16-bit limb partial products)
+-> align to the row max exponent -> 128-bit two's-complement column
+accumulation -> single normalize + RNE encode.
+
+This is the numerics-audit kernel (bit-exact posit dot products for
+verification tables); the throughput path for large GEMMs is
+``posit_gemm`` (dequant + MXU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import dot as dot_mod
+from repro.core.pir import decode, encode_pir
+from repro.core.types import PositConfig
+
+DEFAULT_ROWS = 128
+
+
+def _vpdot_kernel(a_ref, b_ref, o_ref, *, cfg: PositConfig):
+    a = decode(a_ref[...].astype(jnp.uint32), cfg)
+    b = decode(b_ref[...].astype(jnp.uint32), cfg)
+    pir, sticky = dot_mod.vpdot(a, b, cfg, axis=-1)
+    out = encode_pir(pir, cfg, sticky).astype(o_ref.dtype)
+    o_ref[...] = out[:, None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "block_rows", "interpret"))
+def vpdot_rows(a_patterns, b_patterns, cfg: PositConfig,
+               block_rows: int = DEFAULT_ROWS, interpret=True):
+    """Row-wise posit dot product: (R, L) x (R, L) -> (R,) patterns."""
+    r, length = a_patterns.shape
+    assert a_patterns.shape == b_patterns.shape
+    assert length <= dot_mod.MAX_DOT_LENGTH
+    bm = min(block_rows, r)
+    grid = (pl.cdiv(r, bm),)
+    out = pl.pallas_call(
+        functools.partial(_vpdot_kernel, cfg=cfg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, length), lambda i: (i, 0)),
+            pl.BlockSpec((bm, length), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), cfg.storage_dtype),
+        interpret=interpret,
+    )(a_patterns, b_patterns)
+    return out[:, 0]

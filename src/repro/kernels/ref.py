@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+Each function is the mathematical specification its kernel must match
+bit-exactly (tests sweep shapes/dtypes and assert equality / allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.convert import f32_to_posit, posit_to_f32
+from repro.core.posit import vpdot
+from repro.core.types import PositConfig
+
+
+def quantize_2d_ref(x, cfg: PositConfig):
+    return f32_to_posit(x, cfg)
+
+
+def dequantize_2d_ref(p, cfg: PositConfig):
+    return posit_to_f32(p, cfg)
+
+
+def posit_gemm_ref(a, w_patterns, cfg: PositConfig):
+    w = posit_to_f32(w_patterns, cfg)
+    return jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+
+def vpdot_rows_ref(a_patterns, b_patterns, cfg: PositConfig):
+    return vpdot(a_patterns, b_patterns, cfg, axis=-1)

@@ -1,0 +1,123 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``compiled.cost_analysis()`` gives HLO FLOPs and bytes, but collective
+traffic must be read out of the optimized HLO text: we sum the result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async ``-start`` variants counted once, ``-done``
+skipped).  The compiled module is the per-device SPMD program, so the
+sums are per-chip; totals multiply by the chip count.
+
+Hardware model (TPU v5e-class, per assignment):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+_COLL = r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+# "<result-type(s)> <opcode>(" — operands are %-prefixed so they don't match
+_LINE_RE = re.compile(r"=\s+(.*?)\s" + _COLL + r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-chip bytes moved by each collective type (result sizes)."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        type_str, op, _ = m.groups()
+        out[op] = out.get(op, 0) + _shape_bytes(type_str)
+    return out
+
+
+def roofline_terms(*, flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float, n_chips: int) -> dict:
+    """The three roofline terms in seconds (assignment formulas, applied
+    to totals: total_X / (chips * rate) == per-chip X / rate)."""
+    compute_s = flops_per_chip / PEAK_FLOPS
+    memory_s = bytes_per_chip / HBM_BW
+    collective_s = coll_bytes_per_chip / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    return {**terms, "dominant": dominant.replace("_s", ""),
+            "total_flops": flops_per_chip * n_chips,
+            "total_bytes": bytes_per_chip * n_chips}
+
+
+def model_flops(cfg, spec) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE): the useful-work
+    yardstick against compiled HLO FLOPs."""
+    n_params = active_param_count(cfg)
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n_params * tokens
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n_params * tokens
+    tokens = spec.global_batch                        # decode: 1 new token
+    return 2.0 * n_params * tokens
+
+
+def active_param_count(cfg) -> float:
+    """Per-token-active parameter count (MoE counts top_k experts)."""
+    d, v, l_n = cfg.d_model, cfg.vocab, cfg.n_layers
+    if cfg.family == "rwkv6":
+        d_att = cfg.n_heads * cfg.head_dim
+        per_layer = 4 * d * d_att + d_att * d + 2 * d * cfg.d_ff + d * d
+        return v * d * 2 + l_n * per_layer
+    if cfg.family == "whisper":
+        att = 4 * d * cfg.n_heads * cfg.head_dim
+        per_dec = 2 * att + 2 * d * cfg.d_ff
+        per_enc = att + 2 * d * cfg.d_ff
+        return v * d + cfg.n_layers * per_dec + \
+            (cfg.encoder_layers or cfg.n_layers) * per_enc
+    # transformer / hymba
+    if cfg.mla:
+        qh = cfg.qk_nope_dim + cfg.qk_rope_dim
+        attn = (d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads * qh +
+                d * (cfg.kv_lora_rank + cfg.qk_rope_dim) +
+                cfg.kv_lora_rank * cfg.n_heads *
+                (cfg.qk_nope_dim + cfg.v_head_dim) +
+                cfg.n_heads * cfg.v_head_dim * d)
+    else:
+        attn = d * cfg.n_heads * cfg.head_dim * 2 + \
+            d * cfg.n_kv_heads * cfg.head_dim * 2
+    if cfg.is_moe:
+        ffn = 3 * d * cfg.d_ff_expert * cfg.top_k + d * cfg.n_experts
+    else:
+        ffn = 3 * d * cfg.d_ff
+    if cfg.family == "hymba":
+        hs, p_dim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        ssm = d * (2 * hs * p_dim + 2 * n + hs) + hs * p_dim * d
+        per_layer = attn + ffn + ssm
+    else:
+        per_layer = attn + ffn
+    embed = v * d * (1 if cfg.tie_embeddings else 2)
+    return embed + l_n * per_layer

@@ -1,0 +1,30 @@
+"""Attribute collective bytes to source ops (diagnosis tool for §Perf)."""
+from __future__ import annotations
+
+import re
+import sys
+
+from .hlo_cost import (_COLLECTIVES, _INSTR_RE, _type_numel_bytes,
+                       parse_module, _multipliers)
+
+
+def top_collectives(hlo_text: str, n: int = 15):
+    comps = parse_module(hlo_text)
+    mult, _ = _multipliers(comps)
+    rows = []
+    for cname, instrs in comps.items():
+        k = mult.get(cname, 1.0) or 1.0
+        for ins in instrs:
+            base = ins.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not ins.opcode.endswith("-done"):
+                _, byts = _type_numel_bytes(ins.type_str)
+                m = re.search(r'op_name="([^"]*)"', ins.rest)
+                rows.append((k * byts, base, k, ins.type_str[:60],
+                             (m.group(1) if m else "?")[:110]))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+if __name__ == "__main__":
+    for b, op, k, t, name in top_collectives(open(sys.argv[1]).read()):
+        print(f"{b:.3e}B x{k:<6.0f} {op:<18} {t:<50} {name}")

@@ -1,0 +1,44 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+``input_specs`` builds the *data* inputs of the lowered step; parameter /
+optimizer / cache trees are produced with jax.eval_shape against the
+model's init functions — nothing here allocates device memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import get_family
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, spec: ShapeSpec) -> dict:
+    """Data-batch ShapeDtypeStructs for a cell (train/prefill kinds)."""
+    b, s = spec.global_batch, spec.seq_len
+    out = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.family == "whisper":
+        out["frames"] = SDS((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.n_visual_tokens:
+        out["visual"] = SDS((b, cfg.n_visual_tokens, cfg.d_model),
+                            jnp.float32)
+    return out
+
+
+def params_shape(cfg: ModelConfig):
+    fam = get_family(cfg)
+    return jax.eval_shape(
+        lambda k: fam.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def cache_shape(cfg: ModelConfig, spec: ShapeSpec):
+    fam = get_family(cfg)
+    return jax.eval_shape(
+        lambda: fam.init_cache(cfg, spec.global_batch, spec.seq_len))
+
+
+def decode_token_spec(spec: ShapeSpec):
+    return SDS((spec.global_batch,), jnp.int32)

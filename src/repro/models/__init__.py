@@ -1,0 +1,4 @@
+from .config import ModelConfig
+from .registry import build, get_family
+
+__all__ = ["ModelConfig", "build", "get_family"]

@@ -1,0 +1,361 @@
+"""Hymba — hybrid-head LM: parallel attention + Mamba2-style SSM heads.
+
+Per layer, the *same* input feeds (a) GQA attention heads (sliding-window
+in most layers, full/global in ``cfg.global_layers``) and (b) SSM heads
+(scalar-per-head data-dependent decay, state size N=16); the two outputs
+are RMS-normalized and averaged before the output projection
+(arXiv:2411.13676).  ``cfg.n_meta_tokens`` learnable meta tokens are
+prepended at train/prefill time.
+
+SSD engine: chunk-parallel with scalar per-head log decays ((C, C) ratio
+matrices only — no channel dimension, so exponents stay <= 0 and memory
+stays tiny).  A step form drives decode.
+
+Deviation noted in DESIGN.md: the short causal conv1d in front of the SSM
+branch is omitted (state bookkeeping only, no roofline impact).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .config import ModelConfig
+
+
+def init_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    hs, p_dim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = hs * p_dim
+
+    def init_layer(k):
+        ks = jax.random.split(k, 10)
+        s = d ** -0.5
+        return {
+            "ln1": L.init_rms_norm(d, cfg),
+            "ln2": L.init_rms_norm(d, cfg),
+            # attention branch
+            "wq": L.init_dense(ks[0], d, cfg.n_heads * cfg.head_dim),
+            "wk": L.init_dense(ks[1], d, cfg.n_kv_heads * cfg.head_dim),
+            "wv": L.init_dense(ks[2], d, cfg.n_kv_heads * cfg.head_dim),
+            "attn_norm": L.init_rms_norm(cfg.n_heads * cfg.head_dim, cfg),
+            # ssm branch
+            "in_proj": L.init_dense(ks[3], d, 2 * d_in + 2 * n + hs),
+            "A_log": jnp.zeros((hs,), jnp.float32),
+            "dt_bias": jnp.zeros((hs,), jnp.float32),
+            "D": jnp.ones((hs,), jnp.float32),
+            "ssm_norm": L.init_rms_norm(d_in, cfg),
+            # merge + mlp
+            "wo": L.init_dense(ks[4], d_in, d),
+            "mlp": L.init_mlp(ks[5], cfg),
+        }
+
+    keys = jax.random.split(key, 5)
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    params = {
+        "tok_embed": jax.random.normal(
+            keys[1], (cfg.vocab, d), jnp.float32) * 0.02,
+        "layers": jax.vmap(init_layer)(layer_keys),
+        "final_norm": L.init_rms_norm(d, cfg),
+        "lm_head": L.init_dense(keys[2], d, cfg.vocab),
+    }
+    if cfg.n_meta_tokens:
+        params["meta_tokens"] = jax.random.normal(
+            keys[3], (cfg.n_meta_tokens, d), jnp.float32) * 0.02
+    return params
+
+
+# ---------------------------------------------------------------------------
+# SSD (scalar-decay chunked scan)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, b_in, c_in, dt, a_log, h0, chunk: int):
+    """x: (B,S,H,P); b_in,c_in: (B,S,N); dt: (B,S,H) (post-softplus);
+    h0: (B,H,P,N).  Returns (y (B,S,H,P), h_final)."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    la = (-jnp.exp(a_log))[None, None, :] * dt           # log decay <= 0
+
+    xs = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 3, 2, 4)
+    bs = b_in.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cs = c_in.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    dts = dt.reshape(bsz, nc, chunk, h).transpose(1, 0, 3, 2)
+    las = la.reshape(bsz, nc, chunk, h).transpose(1, 0, 3, 2)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))       # j <= c inclusive
+
+    def per_chunk(hprev, inp):
+        xx, bb, cc, dd, ll = inp    # (B,H,C,P) (B,C,N) (B,C,N) (B,H,C) (B,H,C)
+        li = jnp.cumsum(ll, axis=-1)                     # (B,H,C) inclusive
+        diff = li[:, :, :, None] - li[:, :, None, :]     # (B,H,C,C)
+        ratio = jnp.where(tri[None, None], jnp.exp(jnp.minimum(diff, 0.0)),
+                          0.0)
+        sc = jnp.einsum("bcn,bjn->bcj", cc, bb)          # (B,C,C)
+        scores = sc[:, None] * ratio * dd[:, :, None, :]  # (B,H,C,C)
+        y = jnp.einsum("bhcj,bhjp->bhcp", scores, xx)
+        # inter-chunk: y += exp(li) * C . h_prev
+        y += jnp.einsum("bcn,bhpn->bhcp", cc, hprev) * \
+            jnp.exp(li)[..., None]
+        # state update
+        l_tot = li[:, :, -1:]
+        wsc = jnp.exp(l_tot - li) * dd                   # (B,H,C)
+        upd = jnp.einsum("bhc,bhcp,bcn->bhpn", wsc, xx, bb)
+        hnew = jnp.exp(l_tot[:, :, 0])[..., None, None] * hprev + upd
+        return hnew, y
+
+    hfin, ys = lax.scan(per_chunk, h0, (xs, bs, cs, dts, las))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(bsz, s, h, p)
+    return y, hfin
+
+
+def ssd_step(x, b_in, c_in, dt, a_log, h):
+    """Single decode step.  x: (B,H,P); b_in,c_in: (B,N); dt: (B,H)."""
+    a = jnp.exp((-jnp.exp(a_log))[None, :] * dt)         # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x, b_in)
+    h = a[..., None, None] * h + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, c_in)
+    return y, h
+
+
+# ---------------------------------------------------------------------------
+# hybrid block
+# ---------------------------------------------------------------------------
+
+def _split_ssm_proj(p, x, cfg: ModelConfig):
+    hs, p_dim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = hs * p_dim
+    z = L.dense(p["in_proj"], x, cfg)
+    xs, gate, b_in, c_in, dt = jnp.split(
+        z, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])
+    return xs, gate, b_in.astype(jnp.float32), c_in.astype(jnp.float32), dt
+
+
+def _ssm_branch_full(p, x, cfg: ModelConfig, h0=None):
+    bsz, s, _ = x.shape
+    hs, p_dim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xs, gate, b_in, c_in, dt = _split_ssm_proj(p, x, cfg)
+    xh = xs.reshape(bsz, s, hs, p_dim).astype(jnp.float32)
+    xh = xh.transpose(0, 2, 1, 3).transpose(0, 2, 1, 3)  # no-op, clarity
+    if h0 is None:
+        h0 = jnp.zeros((bsz, hs, p_dim, n), jnp.float32)
+    chunk = min(cfg.wkv_chunk, s)
+    y, hfin = ssd_chunked(xh, b_in, c_in, dt, p["A_log"], h0, chunk)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, hs * p_dim).astype(x.dtype)
+    y = y * jax.nn.silu(gate)
+    return L.rms_norm(p["ssm_norm"], y, cfg), hfin
+
+
+def _attn_branch_full(p, x, positions, cfg: ModelConfig, *, is_global):
+    bsz, s, _ = x.shape
+    q = L.dense(p["wq"], x, cfg).reshape(bsz, s, cfg.n_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x, cfg).reshape(bsz, s, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], x, cfg).reshape(bsz, s, cfg.n_kv_heads, cfg.head_dim)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    window = 0 if is_global else cfg.sliding_window
+    out = L.flash_attention(q, k, v, causal=True, cfg=cfg, window=window)
+    out = out.reshape(bsz, s, cfg.n_heads * cfg.head_dim)
+    return L.rms_norm(p["attn_norm"], out, cfg), (k, v)
+
+
+def _merge(p, attn_out, ssm_out, cfg: ModelConfig):
+    return L.dense(p["wo"], 0.5 * (attn_out + ssm_out), cfg)
+
+
+def _forward(params, tokens, cfg: ModelConfig):
+    bsz, s0 = tokens.shape
+    x = params["tok_embed"][tokens].astype(L.cdtype(cfg))
+    if cfg.n_meta_tokens:
+        meta = jnp.broadcast_to(
+            params["meta_tokens"][None].astype(x.dtype),
+            (bsz, cfg.n_meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta, x[:, : s0 - cfg.n_meta_tokens]], axis=1)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    def body(h, lp, *, is_global):
+        xin = L.rms_norm(lp["ln1"], h, cfg)
+        a, _ = _attn_branch_full(lp, xin, positions, cfg,
+                                 is_global=is_global)
+        m, _ = _ssm_branch_full(lp, xin, cfg)
+        h = h + _merge(lp, a, m, cfg)
+        hh = L.rms_norm(lp["ln2"], h, cfg)
+        return h + L.mlp(lp["mlp"], hh, cfg)
+
+    # the SWA/global split is static, so scan the contiguous SWA runs and
+    # unroll only the (few) global layers: SWA attention FLOPs stay
+    # windowed in the lowered HLO, global layers pay full O(S^2).
+    _swa = functools.partial(body, is_global=False)
+
+    def swa_body(h, lp):
+        return _swa(h, lp), None
+
+    if cfg.remat == "layer":
+        swa_body = jax.checkpoint(swa_body)
+
+    bounds = sorted(set(cfg.global_layers))
+    start = 0
+    for g in bounds + [cfg.n_layers]:
+        if g > start:   # scan the SWA run [start, g)
+            run = jax.tree.map(lambda t: t[start:g], params["layers"])
+            x, _ = lax.scan(swa_body, x, run)
+        if g < cfg.n_layers:
+            lp = jax.tree.map(lambda t: t[g], params["layers"])
+            x = body(x, lp, is_global=True)
+        start = g + 1
+    return L.rms_norm(params["final_norm"], x, cfg)
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    x = _forward(params, tokens, cfg)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((bsz, 1), tokens.dtype)], axis=1)
+    mask = jnp.ones((bsz, s), jnp.float32).at[:, -1].set(0.0)
+    if cfg.n_meta_tokens:
+        mask = mask.at[:, : cfg.n_meta_tokens].set(0.0)
+    w = params["lm_head"]["w"].astype(x.dtype)
+    ck = min(cfg.loss_chunk, s)
+
+    def chunk_loss(ci):
+        xs = lax.dynamic_slice_in_dim(x, ci * ck, ck, 1)
+        ls = lax.dynamic_slice_in_dim(labels, ci * ck, ck, 1)
+        ms = lax.dynamic_slice_in_dim(mask, ci * ck, ck, 1)
+        logits = (xs @ w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], -1)[..., 0]
+        return ((logz - gold) * ms).sum(), ms.sum()
+
+    losses, counts = lax.map(chunk_loss, jnp.arange(s // ck))
+    return losses.sum() / jnp.maximum(counts.sum(), 1.0)
+
+
+def logits_fn(params, tokens, cfg: ModelConfig, visual=None):
+    x = _forward(params, tokens, cfg)
+    return (x @ params["lm_head"]["w"].astype(x.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving: ring SWA caches + tiny SSM state (+ full cache on global layers)
+# ---------------------------------------------------------------------------
+
+def _cache_dtype(cfg: ModelConfig):
+    if cfg.kv_posit:
+        return L.pcfg(cfg.kv_posit).storage_dtype
+    return L.cdtype(cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    hs, p_dim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    w = cfg.sliding_window or max_len
+    t_swa = min(max_len, w)
+    kv = (batch, t_swa, cfg.n_kv_heads, cfg.head_dim)
+    kv_g = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    dt = _cache_dtype(cfg)
+    return {
+        # ring caches for every layer; full-length caches only for the
+        # (few) global layers, stacked separately to bound memory
+        "k_swa": jnp.zeros((cfg.n_layers, *kv), dt),
+        "v_swa": jnp.zeros((cfg.n_layers, *kv), dt),
+        "k_glb": jnp.zeros((len(cfg.global_layers), *kv_g), dt),
+        "v_glb": jnp.zeros((len(cfg.global_layers), *kv_g), dt),
+        "ssm": jnp.zeros((cfg.n_layers, batch, hs, p_dim, n), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    from repro.core.convert import f32_to_posit
+    pos = cache["len"]
+    bsz = token.shape[0]
+    x = params["tok_embed"][token][:, None, :].astype(L.cdtype(cfg))
+    is_global = [i in cfg.global_layers for i in range(cfg.n_layers)]
+    glb_index = {i: j for j, i in enumerate(cfg.global_layers)}
+
+    def quant(t):
+        if cfg.kv_posit:
+            return f32_to_posit(t.astype(jnp.float32), L.pcfg(cfg.kv_posit))
+        return t.astype(L.cdtype(cfg))
+
+    # unrolled python loop over layers: global/SWA layout differs per
+    # layer, and n_layers is static (32)
+    k_swa, v_swa = cache["k_swa"], cache["v_swa"]
+    k_glb, v_glb = cache["k_glb"], cache["v_glb"]
+    ssm = cache["ssm"]
+    h = x
+    layers = params["layers"]
+    for li in range(cfg.n_layers):
+        lp = jax.tree.map(lambda t: t[li], layers)
+        xin = L.rms_norm(lp["ln1"], h, cfg)
+        q = L.dense(lp["wq"], xin, cfg).reshape(
+            bsz, 1, cfg.n_heads, cfg.head_dim)
+        k = L.dense(lp["wk"], xin, cfg).reshape(
+            bsz, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = L.dense(lp["wv"], xin, cfg).reshape(
+            bsz, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = L.apply_rope(q, pos[None, None], cfg.rope_theta)
+        k = L.apply_rope(k, pos[None, None], cfg.rope_theta)
+        if is_global[li]:
+            gi = glb_index[li]
+            kc = lax.dynamic_update_slice_in_dim(k_glb[gi], quant(k), pos, 1)
+            vc = lax.dynamic_update_slice_in_dim(v_glb[gi], quant(v), pos, 1)
+            k_glb = k_glb.at[gi].set(kc)
+            v_glb = v_glb.at[gi].set(vc)
+            att = L.decode_attention(q, kc, vc, pos + 1, cfg=cfg,
+                                     kv_posit=cfg.kv_posit)
+        else:
+            t_swa = k_swa.shape[2]
+            slot = pos % t_swa
+            kc = lax.dynamic_update_slice_in_dim(k_swa[li], quant(k), slot, 1)
+            vc = lax.dynamic_update_slice_in_dim(v_swa[li], quant(v), slot, 1)
+            k_swa = k_swa.at[li].set(kc)
+            v_swa = v_swa.at[li].set(vc)
+            att = L.decode_attention(
+                q, kc, vc, jnp.minimum(pos + 1, t_swa), cfg=cfg,
+                kv_posit=cfg.kv_posit)
+        att = att.reshape(bsz, 1, cfg.n_heads * cfg.head_dim)
+        att = L.rms_norm(lp["attn_norm"], att, cfg)
+
+        xs, gate, b_in, c_in, dt = _split_ssm_proj(lp, xin, cfg)
+        xh = xs[:, 0].reshape(bsz, cfg.ssm_heads,
+                              cfg.ssm_head_dim).astype(jnp.float32)
+        y, hnew = ssd_step(xh, b_in[:, 0], c_in[:, 0], dt[:, 0],
+                           lp["A_log"], ssm[li])
+        ssm = ssm.at[li].set(hnew)
+        y = y + lp["D"][None, :, None] * xh
+        y = y.reshape(bsz, 1, -1).astype(h.dtype) * jax.nn.silu(gate)
+        y = L.rms_norm(lp["ssm_norm"], y, cfg)
+
+        h = h + _merge(lp, att, y, cfg)
+        hh = L.rms_norm(lp["ln2"], h, cfg)
+        h = h + L.mlp(lp["mlp"], hh, cfg)
+
+    h = L.rms_norm(params["final_norm"], h, cfg)
+    logits = (h[:, 0, :] @ params["lm_head"]["w"].astype(h.dtype))
+    new_cache = {"k_swa": k_swa, "v_swa": v_swa, "k_glb": k_glb,
+                 "v_glb": v_glb, "ssm": ssm, "len": pos + 1}
+    return logits.astype(jnp.float32), new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, visual=None):
+    """Simple prefill: run decode_step over the prompt (hybrid caches have
+    heterogeneous layouts; throughput prefill would fuse, serving tests
+    only need correctness)."""
+    bsz, s = tokens.shape
+    cache = init_cache(cfg, bsz, max(s + 1, cfg.sliding_window or s + 1))
+
+    def step(cache, tok):
+        logits, cache = decode_step(params, cache, tok, cfg)
+        return cache, logits
+
+    cache, logits = lax.scan(step, cache, tokens.T)
+    return cache, logits[-1]

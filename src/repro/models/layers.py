@@ -1,0 +1,435 @@
+"""Shared neural layers (pure functional, pjit/GSPMD-friendly).
+
+Conventions
+-----------
+* params are plain dict pytrees of jnp arrays; init functions take an rng
+  key and a ModelConfig and are ``jax.eval_shape``-safe (used by the
+  dry-run to build ShapeDtypeStruct trees without allocating).
+* activations run in ``cfg.compute_dtype``; params stay float32 unless a
+  serving transform quantized them to posit patterns (unsigned dtypes), in
+  which case every consumer dequantizes on the fly (the paper's technique
+  as a storage dtype).
+* attention is chunked-flash (online softmax over KV blocks) in pure JAX
+  so the same code lowers on TPU *and* CPU; the causal variant can skip
+  future blocks with lax.cond (cfg.causal_skip='cond').
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.convert import posit_to_f32
+from repro.core.types import POSIT8, POSIT16
+from .config import ModelConfig
+
+_PCFGS = {"posit16": POSIT16, "posit8": POSIT8}
+
+
+def pcfg(name: str):
+    return _PCFGS[name]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def maybe_dequant(w, cfg: ModelConfig):
+    """Posit-quantized weights (unsigned ints) decode on the fly."""
+    if jnp.issubdtype(w.dtype, jnp.unsignedinteger):
+        return posit_to_f32(w, pcfg(cfg.weight_posit or "posit16"))
+    return w
+
+
+def dense(p, x, cfg: ModelConfig):
+    w = maybe_dequant(p["w"], cfg).astype(x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_dense(key, d_in, d_out, bias=False, scale=None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def rms_norm(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * lax.rsqrt(var + cfg.norm_eps)
+    w = p["scale"].astype(jnp.float32)
+    if cfg.norm_plus_one:
+        w = 1.0 + w
+    return (x * w).astype(dt)
+
+
+def init_rms_norm(d, cfg: ModelConfig):
+    init = jnp.zeros if cfg.norm_plus_one else jnp.ones
+    return {"scale": init((d,), jnp.float32)}
+
+
+def layer_norm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(dt)
+
+
+def init_layer_norm(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                     # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (pure JAX online softmax)
+# ---------------------------------------------------------------------------
+
+_NEG = -1e30
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (static shapes only)."""
+    c = min(target, n)
+    while n % c:
+        c -= 1
+    return c
+
+
+def _attn_block(q, k, v, bias):
+    """q: (B,G,R,Qc,D) k: (B,G,Kc,D) v: (B,G,Kc,Dv) bias: (Qc,Kc) or None."""
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", q, k).astype(jnp.float32)
+    if bias is not None:
+        s = s + bias
+    return s
+
+
+def _attn_context_parallel(q, k, v, cfg: ModelConfig):
+    """Context-parallel attention sharding: q's sequence dim over 'model',
+    k/v replicated over 'model'.
+
+    Rationale (§Perf iteration 1): when head counts do not divide TP=16
+    (kv=8, H=14/24/25/40...), GSPMD falls back to sharding the *head_dim
+    contraction* of the score einsum, inserting an all-reduce of every
+    (qc, kc) score block — 13 TB/chip on granite-moe prefill.  The
+    sequence dim always divides, keeps the contraction local, and
+    composes with the Megatron-SP residual constraint (same layout, no
+    resharding between layers).  No-op outside a mesh context.
+    """
+    if not cfg.seq_shard_activations:
+        return q, k, v
+    try:
+        from jax.sharding import PartitionSpec as P
+        baxes = tuple(cfg.batch_axes)
+        q = lax.with_sharding_constraint(q, P(baxes, "model", None, None))
+        k = lax.with_sharding_constraint(k, P(baxes, None, None, None))
+        v = lax.with_sharding_constraint(v, P(baxes, None, None, None))
+    except (ValueError, RuntimeError, TypeError, NameError):
+        pass
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
+                    window: int = 0, q_offset: int = 0):
+    """q: (B,S,H,D); k,v: (B,T,G,D[v]) grouped-query; returns (B,S,H,Dv).
+
+    Scans KV in blocks with an online-softmax carry; the causal variant
+    optionally skips strictly-future blocks with lax.cond.
+    """
+    q, k, v = _attn_context_parallel(q, k, v, cfg)
+    b, s_len, h, d = q.shape
+    t_len, g = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    r = h // g
+    scale = d ** -0.5
+    qc = _pick_chunk(s_len, cfg.attn_chunk_q)
+    kc = _pick_chunk(t_len, cfg.attn_chunk_kv)
+    n_q, n_k = s_len // qc, t_len // kc
+
+    qg = (q.reshape(b, n_q, qc, g, r, d).transpose(1, 0, 3, 4, 2, 5)
+          * scale)                                          # (nq,B,G,R,qc,D)
+    kg = k.reshape(b, n_k, kc, g, d).transpose(1, 0, 3, 2, 4)
+    vg = v.reshape(b, n_k, kc, g, dv).transpose(1, 0, 3, 2, 4)
+
+    q_pos = q_offset + jnp.arange(s_len).reshape(n_q, qc)
+    k_pos = jnp.arange(t_len).reshape(n_k, kc)
+
+    def one_q_chunk(qi):
+        qblk = qg[qi]
+        qp = q_pos[qi]                                      # (qc,)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, kp = kg[ki], vg[ki], k_pos[ki]
+
+            def compute(args):
+                m, l, acc = args
+                bias = jnp.zeros((qc, kc), jnp.float32)
+                if causal:
+                    bias = jnp.where(qp[:, None] >= kp[None, :], 0.0, _NEG)
+                if window:
+                    bias = bias + jnp.where(
+                        qp[:, None] - kp[None, :] < window, 0.0, _NEG)
+                sblk = _attn_block(qblk, kblk, vblk, bias)  # (B,G,R,qc,kc)
+                m_new = jnp.maximum(m, sblk.max(-1))
+                p = jnp.exp(sblk - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + p.sum(-1)
+                acc_new = acc * alpha[..., None] + jnp.einsum(
+                    "bgrqk,bgkv->bgrqv", p.astype(vblk.dtype), vblk
+                ).astype(jnp.float32)
+                return m_new, l_new, acc_new
+
+            if causal and cfg.causal_skip == "cond":
+                relevant = kp[0] <= qp[-1]
+                if window:
+                    relevant &= (qp[0] - kp[-1]) < window
+                m, l, acc = lax.cond(relevant, compute,
+                                     lambda a: a, (m, l, acc))
+            else:
+                m, l, acc = compute((m, l, acc))
+            return (m, l, acc), None
+
+        m0 = jnp.full((b, g, r, qc), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, g, r, qc), jnp.float32)
+        a0 = jnp.zeros((b, g, r, qc, dv), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_k))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out                                          # (B,G,R,qc,Dv)
+
+    outs = lax.map(one_q_chunk, jnp.arange(n_q))            # (nq,B,G,R,qc,Dv)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s_len, h, dv)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, cfg: ModelConfig,
+                     kv_posit: Optional[str] = None, window: int = 0):
+    """Single-token decode: q (B,1,H,D); caches (B,T,G,D) possibly posit
+    patterns; positions >= cache_len are masked.
+
+    Single-shot formulation (§Perf, dbrx decode): one score einsum over
+    the full cache.  The earlier chunked scan sliced the seq-sharded
+    cache at a *traced* offset, which GSPMD can only lower by
+    all-gathering the entire cache every step (21.5 GB/chip/token on
+    dbrx).  With one einsum the T axis stays sharded end-to-end: the
+    contraction is local and the softmax reductions across shards are
+    (B,H)-sized scalars.  Decode scores are tiny (B*H*T f32), so no
+    chunking is needed for memory.
+    """
+    b, _, h, d = q.shape
+    t_len, g = k_cache.shape[1], k_cache.shape[2]
+    r = h // g
+    scale = d ** -0.5
+
+    # §Perf iteration 2 (dbrx decode): materialize the dequantized cache
+    # in bf16, not f32 — halves the dominant HBM traffic; the score
+    # einsum still accumulates in f32.  (On real TPUs the Pallas
+    # posit-codec kernel streams u8->VMEM and this materialization
+    # disappears entirely; see kernels/posit_gemm.py.)
+    ks, vs = k_cache, v_cache
+    if kv_posit is not None:
+        ks = posit_to_f32(ks, pcfg(kv_posit))
+        vs = posit_to_f32(vs, pcfg(kv_posit))
+    ks = ks.astype(cdtype(cfg))
+    vs = vs.astype(cdtype(cfg))
+
+    qg = (q.reshape(b, g, r, d) * scale).astype(cdtype(cfg))
+    # (refuted §Perf iteration: a bf16 softmax was both slightly *slower*
+    # on the memory term (+3%, XLA re-materialized converts) and broke
+    # decode-vs-prefill agreement; scores stay f32.)
+    scores = jnp.einsum("bgrd,btgd->bgrt", qg, ks,
+                        preferred_element_type=jnp.float32)  # (B,G,R,T)
+    t_pos = jnp.arange(t_len)
+    valid = t_pos < cache_len
+    if window:
+        valid &= t_pos >= (cache_len - window)
+    scores = jnp.where(valid[None, None, None, :], scores, _NEG)
+    m = scores.max(-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = p.sum(-1)
+    out = jnp.einsum("bgrt,btgv->bgrv", p.astype(cdtype(cfg)), vs,
+                     preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, 1, h, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": init_dense(k1, d, f),
+        "wg": init_dense(k2, d, f),
+        "wo": init_dense(k3, f, d),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig):
+    gate = dense(p["wg"], x, cfg)
+    act = jax.nn.gelu(gate) if cfg.act == "gelu" else jax.nn.silu(gate)
+    return dense(p["wo"], act * dense(p["wi"], x, cfg), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts: sort-based capacity dispatch (no fake-FLOP one-hot
+# matmuls), experts sharded over the 'model' axis (EP)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "router": init_dense(k1, d, e, scale=s),
+        "wi": jax.random.normal(k2, (e, d, f), jnp.float32) * s,
+        "wg": jax.random.normal(k3, (e, d, f), jnp.float32) * s,
+        "wo": jax.random.normal(k4, (e, f, d), jnp.float32) * (f ** -0.5),
+    }
+
+
+def _moe_row(p, xt, cfg: ModelConfig):
+    """Route one batch row: xt (S, D) -> (S, D).
+
+    Dispatch (top-k -> sort -> fixed-capacity buffers) is row-local, so
+    under DP the argsort/bincount/gather never cross devices; only the
+    expert einsum (whose capacity dim is sharded over 'model' by the
+    caller) touches the TP axis.
+    """
+    s, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    logits = dense(p["router"], xt, cfg).astype(jnp.float32)  # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = lax.top_k(probs, k)                       # (S, k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = gate_i.reshape(-1)                                # (S*k,)
+    order = jnp.argsort(flat_e)                # stable; groups by expert
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    offsets = jnp.cumsum(counts) - counts                      # exclusive
+    pos_in_e = jnp.arange(s * k) - offsets[sorted_e]
+
+    cap = _moe_capacity(s, cfg)
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)  # overflow
+
+    tok_sorted = order // k
+    xg = xt[tok_sorted]                                        # (S*k, D)
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[dest].set(
+        jnp.where(keep[:, None], xg, 0))
+    xe = buf[:-1].reshape(e, cap, d)
+    return xe, (order, dest, keep, gate_w)
+
+
+def _moe_capacity(s: int, cfg: ModelConfig) -> int:
+    return int(max(1, (s * cfg.top_k / cfg.n_experts)
+                   * cfg.capacity_factor))
+
+
+def _moe_combine(ye, aux, s, d, dtype, cfg: ModelConfig):
+    e, k = cfg.n_experts, cfg.top_k
+    cap = ye.shape[1]
+    order, dest, keep, gate_w = aux
+    y_sorted = ye.reshape(e * cap, d)[jnp.minimum(dest, e * cap - 1)]
+    y_sorted = jnp.where(keep[:, None], y_sorted, 0)
+    y_flat = jnp.zeros((s * k, d), dtype).at[order].set(y_sorted)
+    return (y_flat.reshape(s, k, d)
+            * gate_w[..., None].astype(dtype)).sum(axis=1)
+
+
+def moe(p, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D).  Row-local top-k dispatch + batched
+    expert einsum with the expert/capacity dim sharded over 'model'."""
+    b, s, d = x.shape
+    # (refuted §Perf iteration: replicating tokens over 'model' before
+    # dispatch did NOT remove the backward scatter-add all-reduces —
+    # GSPMD reshards the cotangents back to the seq layout regardless.)
+    xe, aux = jax.vmap(lambda r: _moe_row(p, r, cfg))(x)   # (B,E,C,D)
+    xe = _moe_shard_capacity(xe, cfg)
+
+    wi = maybe_dequant(p["wi"], cfg).astype(x.dtype)
+    wg = maybe_dequant(p["wg"], cfg).astype(x.dtype)
+    wo = maybe_dequant(p["wo"], cfg).astype(x.dtype)
+    hg = jnp.einsum("becd,edf->becf", xe, wg)
+    hi = jnp.einsum("becd,edf->becf", xe, wi)
+    act = jax.nn.gelu(hg) if cfg.act == "gelu" else jax.nn.silu(hg)
+    # §Perf iteration 2: emit the expert output in the compute dtype
+    # directly — XLA otherwise runs this dot with an f32 result and
+    # defers the bf16 convert until *after* the combine's capacity
+    # all-gather, doubling the dominant collective's bytes.
+    ye = jnp.einsum("becf,efd->becd", act * hi, wo,
+                    preferred_element_type=x.dtype)        # (B,E,C,D)
+    ye = _moe_shard_capacity(ye, cfg)
+
+    y = jax.vmap(
+        lambda yr, ar: _moe_combine(yr, ar, s, d, x.dtype, cfg))(ye, aux)
+    # named so the layer remat policy can SAVE the MoE output: without
+    # this, backward re-runs the whole dispatch (gathers + scatter-adds)
+    # a second time (§Perf iteration, dbrx train)
+    from jax.ad_checkpoint import checkpoint_name
+    return checkpoint_name(y, "moe_out")
+
+
+def _moe_replicate_tokens(x, cfg: ModelConfig):
+    try:
+        from jax.sharding import PartitionSpec as P
+        return lax.with_sharding_constraint(
+            x, P(tuple(cfg.batch_axes), None, None))
+    except (ValueError, RuntimeError, TypeError, NameError):
+        return x
+
+
+def _moe_shard_capacity(xe, cfg: ModelConfig):
+    """Expert-parallel buffer sharding.
+
+    When the expert count divides the TP axis (dbrx: 16 @ 16), shard the
+    expert dim — true EP: dispatch becomes an all-to-all against the
+    seq-sharded activations and each chip runs only its experts.
+    Otherwise (granite-moe: 40 @ 16) shard the *capacity* dim, which
+    still splits the expert FLOPs 16 ways with replicated weights.
+    """
+    try:
+        from jax.sharding import PartitionSpec as P, get_abstract_mesh
+        mesh = get_abstract_mesh()
+        n_model = dict(zip(mesh.axis_names, mesh.axis_sizes)).get("model", 1)
+        if n_model > 1 and cfg.n_experts % n_model == 0:
+            spec = P(tuple(cfg.batch_axes), "model", None, None)
+        else:
+            spec = P(tuple(cfg.batch_axes), None, "model", None)
+        return lax.with_sharding_constraint(xe, spec)
+    except (ValueError, RuntimeError, TypeError, NameError,
+            AttributeError, ImportError):
+        return xe

@@ -1,0 +1,39 @@
+"""Model family registry: a uniform protocol over the four families."""
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+from . import hymba, rwkv6, transformer, whisper
+from .config import ModelConfig
+
+_FAMILIES = {
+    "transformer": transformer,
+    "rwkv6": rwkv6,
+    "hymba": hymba,
+    "whisper": whisper,
+}
+
+
+def get_family(cfg: ModelConfig):
+    """Returns the module implementing the model protocol for ``cfg``."""
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}") from None
+
+
+def build(cfg: ModelConfig):
+    """Bundle the protocol functions with the config (convenience)."""
+    fam = get_family(cfg)
+    return SimpleNamespace(
+        cfg=cfg,
+        init_params=lambda key: fam.init_params(key, cfg),
+        train_loss=lambda params, batch: fam.train_loss(params, batch, cfg),
+        logits=lambda params, tokens, **kw: fam.logits_fn(
+            params, tokens, cfg, **kw),
+        init_cache=lambda batch, max_len: fam.init_cache(cfg, batch, max_len),
+        prefill=lambda params, tokens, **kw: fam.prefill(
+            params, tokens, cfg, **kw),
+        decode_step=lambda params, cache, token: fam.decode_step(
+            params, cache, token, cfg),
+    )

@@ -1,0 +1,318 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay.
+
+Faithful structure: token-shift with data-dependent mixing (5-way LoRA),
+WKV recurrence  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+out_t = r_t (S_{t-1} + diag(u) k_t^T v_t),  per-head group norm, output
+gate, and the squared-ReLU channel-mix.  Decay w_t = exp(-exp(...)) is
+data-dependent (w0 + LoRA).
+
+Two WKV engines:
+* ``wkv_scan``    — step-by-step reference (used by tests / decode).
+* ``wkv_chunked`` — chunk-parallel form in log-decay space (all exponents
+  <= 0, so no overflow); (C, C, N) ratio tensors are materialized per
+  chunk which bounds the working set; used for training/prefill.
+
+Posit note (DESIGN.md §4): no KV cache exists — the O(1) state is the
+whole memory; the paper's codec applies to weights/gradients only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .config import ModelConfig
+
+
+def _heads(cfg: ModelConfig):
+    n = cfg.head_dim                       # key/value head size (64)
+    h = cfg.n_heads
+    return h, n, h * n
+
+
+def init_params(key, cfg: ModelConfig):
+    h, n, d_att = _heads(cfg)
+    d, ff = cfg.d_model, cfg.d_ff
+    lora = cfg.decay_lora
+
+    def init_layer(k):
+        ks = jax.random.split(k, 12)
+        s = d ** -0.5
+        return {
+            "ln1": L.init_layer_norm(d),
+            "ln2": L.init_layer_norm(d),
+            # token-shift mixing coefficients + data-dependent LoRA
+            "maa_x": jnp.zeros((d,), jnp.float32),
+            "maa_wkvrg": jnp.zeros((5, d), jnp.float32),
+            "tm_w1": jax.random.normal(ks[0], (d, 5 * lora)) * s,
+            "tm_w2": jax.random.normal(ks[1], (5, lora, d)) * (lora ** -0.5),
+            # decay
+            "w0": jnp.full((d_att,), -6.0, jnp.float32),
+            "wl_a": jax.random.normal(ks[2], (d, lora)) * s,
+            "wl_b": jax.random.normal(ks[3], (lora, d_att)) * (lora ** -0.5),
+            "u": jnp.zeros((h, n), jnp.float32),
+            "wr": L.init_dense(ks[4], d, d_att),
+            "wk": L.init_dense(ks[5], d, d_att),
+            "wv": L.init_dense(ks[6], d, d_att),
+            "wg": L.init_dense(ks[7], d, d_att),
+            "ln_x": L.init_layer_norm(d_att),
+            "wo": L.init_dense(ks[8], d_att, d),
+            # channel mix
+            "cm_maa_k": jnp.zeros((d,), jnp.float32),
+            "cm_maa_r": jnp.zeros((d,), jnp.float32),
+            "cm_wk": L.init_dense(ks[9], d, ff),
+            "cm_wv": L.init_dense(ks[10], ff, d),
+            "cm_wr": L.init_dense(ks[11], d, d),
+        }
+
+    keys = jax.random.split(key, 4)
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    return {
+        "tok_embed": jax.random.normal(
+            keys[1], (cfg.vocab, d), jnp.float32) * 0.02,
+        "ln0": L.init_layer_norm(d),
+        "layers": jax.vmap(init_layer)(layer_keys),
+        "ln_out": L.init_layer_norm(d),
+        "lm_head": L.init_dense(keys[2], d, cfg.vocab),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV engines
+# ---------------------------------------------------------------------------
+
+def wkv_scan(r, k, v, w, u, state):
+    """Reference recurrence.  r,k,v,w: (B,S,H,N); u: (H,N);
+    state: (B,H,N,V=N).  Returns (out (B,S,H,N), new state)."""
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                     # (B,H,N)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, outs = lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int):
+    """Chunk-parallel WKV in log-decay space (see module docstring)."""
+    b, s, h, n = r.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    lw = jnp.log(jnp.maximum(w, 1e-38))              # <= 0
+
+    def shape(t):
+        return t.reshape(b, nc, chunk, h, n).transpose(1, 0, 3, 2, 4)
+
+    rc, kc, vc, lwc = shape(r), shape(k), shape(v), shape(lw)  # (nc,B,H,C,N)
+
+    def per_chunk(st, inp):
+        rr, kk, vv, ll = inp                         # (B,H,C,N)
+        li = jnp.cumsum(ll, axis=2)                  # inclusive logs
+        lx = li - ll                                 # exclusive
+        # intra: A[c,j] = sum_n r[c] k[j] exp(lx[c] - li[j]),  j < c
+        diff = lx[:, :, :, None, :] - li[:, :, None, :, :]   # (B,H,C,C,N)
+        cmask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        ratio = jnp.where(cmask[None, None, :, :, None],
+                          jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+        amat = jnp.einsum("bhcn,bhjn,bhcjn->bhcj", rr, kk, ratio)
+        # diagonal bonus term
+        bonus = jnp.einsum("bhcn,bhcn->bhc", rr * u[None, :, None, :], kk)
+        out = jnp.einsum("bhcj,bhjv->bhcv", amat, vv)
+        out += bonus[..., None] * vv
+        # inter: r[c] * exp(lx[c]) against the carried state
+        out += jnp.einsum("bhcn,bhnv->bhcv", rr * jnp.exp(lx), st)
+        # state update: S = exp(L_C) S + sum_j exp(L_C - li[j]) k_j^T v_j
+        l_tot = li[:, :, -1:, :]                     # (B,H,1,N)
+        kscale = kk * jnp.exp(l_tot - li)
+        st = jnp.exp(l_tot[:, :, 0, :, None]) * st + jnp.einsum(
+            "bhjn,bhjv->bhnv", kscale, vv)
+        return st, out
+
+    state, outs = lax.scan(per_chunk, state, (rc, kc, vc, lwc))
+    return (outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, n), state)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _token_shift(x, prev):
+    """prev: (B,D) hidden of the token before this window."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix(p, x, prev_x, wkv_state, cfg: ModelConfig, *, use_chunked):
+    b, s, d = x.shape
+    h, n, d_att = _heads(cfg)
+    xx = _token_shift(x, prev_x)
+    sx = xx - x
+    xxx = x + sx * p["maa_x"].astype(x.dtype)
+    mix = jnp.tanh(xxx @ p["tm_w1"].astype(x.dtype))     # (B,S,5*lora)
+    mix = mix.reshape(b, s, 5, -1).transpose(2, 0, 1, 3)
+    mods = jnp.einsum("fbsl,fld->fbsd", mix,
+                      p["tm_w2"].astype(x.dtype))        # (5,B,S,D)
+    mw, mk, mv, mr, mg = mods + p["maa_wkvrg"][:, None, None, :].astype(x.dtype)
+    xw, xk, xv, xr, xg = (x + sx * m for m in (mw, mk, mv, mr, mg))
+
+    rr = L.dense(p["wr"], xr, cfg).reshape(b, s, h, n)
+    kk = L.dense(p["wk"], xk, cfg).reshape(b, s, h, n)
+    vv = L.dense(p["wv"], xv, cfg).reshape(b, s, h, n)
+    gg = jax.nn.silu(L.dense(p["wg"], xg, cfg))
+
+    dlog = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["wl_a"].astype(x.dtype)) @
+        p["wl_b"].astype(x.dtype)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dlog)).reshape(b, s, h, n)      # in (0,1)
+
+    rr32, kk32, vv32 = (t.astype(jnp.float32) for t in (rr, kk, vv))
+    u = p["u"].astype(jnp.float32)
+    if use_chunked:
+        out, wkv_state = wkv_chunked(rr32, kk32, vv32, w, u, wkv_state,
+                                     cfg.wkv_chunk)
+    else:
+        out, wkv_state = wkv_scan(rr32, kk32, vv32, w, u, wkv_state)
+
+    out = out.reshape(b, s, d_att)
+    out = L.layer_norm(p["ln_x"], out, cfg.norm_eps).astype(x.dtype)
+    out = L.dense(p["wo"], out * gg, cfg)
+    return out, x[:, -1, :], wkv_state
+
+
+def _channel_mix(p, x, prev_x, cfg: ModelConfig):
+    xx = _token_shift(x, prev_x)
+    sx = xx - x
+    xk = x + sx * p["cm_maa_k"].astype(x.dtype)
+    xr = x + sx * p["cm_maa_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(L.dense(p["cm_wk"], xk, cfg)))
+    out = jax.nn.sigmoid(L.dense(p["cm_wr"], xr, cfg)) * \
+        L.dense(p["cm_wv"], kk, cfg)
+    return out, x[:, -1, :]
+
+
+def _forward(params, tokens, cfg: ModelConfig, *, use_chunked=True):
+    b, s = tokens.shape
+    h, n, _ = _heads(cfg)
+    x = params["tok_embed"][tokens].astype(L.cdtype(cfg))
+    x = L.layer_norm(params["ln0"], x, cfg.norm_eps)
+
+    zeros_prev = jnp.zeros((b, cfg.d_model), x.dtype)
+    zero_state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def body(hid, lp):
+        a, _, _ = _time_mix(lp, L.layer_norm(lp["ln1"], hid, cfg.norm_eps),
+                            zeros_prev, zero_state, cfg,
+                            use_chunked=use_chunked)
+        hid = hid + a
+        c, _ = _channel_mix(lp, L.layer_norm(lp["ln2"], hid, cfg.norm_eps),
+                            zeros_prev, cfg)
+        return hid + c, None
+
+    if cfg.remat == "layer":
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["layers"])
+    return L.layer_norm(params["ln_out"], x, cfg.norm_eps)
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _forward(params, tokens, cfg)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+    mask = jnp.ones((b, s), jnp.float32).at[:, -1].set(0.0)
+    if batch.get("mask") is not None:
+        mask = mask * batch["mask"]
+    w = params["lm_head"]["w"].astype(x.dtype)
+    ck = min(cfg.loss_chunk, s)
+    n_chunks = s // ck
+
+    def chunk_loss(ci):
+        xs = lax.dynamic_slice_in_dim(x, ci * ck, ck, 1)
+        ls = lax.dynamic_slice_in_dim(labels, ci * ck, ck, 1)
+        ms = lax.dynamic_slice_in_dim(mask, ci * ck, ck, 1)
+        logits = (xs @ w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], -1)[..., 0]
+        return ((logz - gold) * ms).sum(), ms.sum()
+
+    losses, counts = lax.map(chunk_loss, jnp.arange(n_chunks))
+    return losses.sum() / jnp.maximum(counts.sum(), 1.0)
+
+
+def logits_fn(params, tokens, cfg: ModelConfig, visual=None):
+    x = _forward(params, tokens, cfg, use_chunked=False)
+    return (x @ params["lm_head"]["w"].astype(x.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving: O(1) state instead of a KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    del max_len                                       # state is O(1)!
+    h, n, _ = _heads(cfg)
+    lshape = (cfg.n_layers, batch)
+    return {
+        "wkv": jnp.zeros((*lshape, h, n, n), jnp.float32),
+        "tm_x": jnp.zeros((*lshape, cfg.d_model), jnp.float32),
+        "cm_x": jnp.zeros((*lshape, cfg.d_model), jnp.float32),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    x = params["tok_embed"][token][:, None, :].astype(L.cdtype(cfg))
+    x = L.layer_norm(params["ln0"], x, cfg.norm_eps)
+
+    def body(hid, layer):
+        lp, wkv_s, tm_prev, cm_prev = layer
+        a, tm_new, wkv_s = _time_mix(
+            lp, L.layer_norm(lp["ln1"], hid, cfg.norm_eps),
+            tm_prev.astype(hid.dtype), wkv_s, cfg, use_chunked=False)
+        hid = hid + a
+        c, cm_new = _channel_mix(
+            lp, L.layer_norm(lp["ln2"], hid, cfg.norm_eps),
+            cm_prev.astype(hid.dtype), cfg)
+        return hid + c, (wkv_s, tm_new.astype(jnp.float32),
+                         cm_new.astype(jnp.float32))
+
+    x, (wkv_new, tm_new, cm_new) = lax.scan(
+        body, x, (params["layers"], cache["wkv"], cache["tm_x"],
+                  cache["cm_x"]))
+    x = L.layer_norm(params["ln_out"], x, cfg.norm_eps)
+    logits = (x[:, 0, :] @ params["lm_head"]["w"].astype(x.dtype))
+    new_cache = {"wkv": wkv_new, "tm_x": tm_new, "cm_x": cm_new,
+                 "len": cache["len"] + 1}
+    return logits.astype(jnp.float32), new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, visual=None):
+    """Prefill = forward pass threading the recurrent state through."""
+    b, s = tokens.shape
+    h, n, _ = _heads(cfg)
+    x = params["tok_embed"][tokens].astype(L.cdtype(cfg))
+    x = L.layer_norm(params["ln0"], x, cfg.norm_eps)
+    zeros_prev = jnp.zeros((b, cfg.d_model), x.dtype)
+    zero_state = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def body(hid, lp):
+        a, tm_new, wkv_s = _time_mix(
+            lp, L.layer_norm(lp["ln1"], hid, cfg.norm_eps),
+            zeros_prev, zero_state, cfg, use_chunked=True)
+        hid = hid + a
+        c, cm_new = _channel_mix(
+            lp, L.layer_norm(lp["ln2"], hid, cfg.norm_eps), zeros_prev, cfg)
+        return hid + c, (wkv_s, tm_new.astype(jnp.float32),
+                         cm_new.astype(jnp.float32))
+
+    x, (wkv, tm_x, cm_x) = lax.scan(body, x, params["layers"])
+    x = L.layer_norm(params["ln_out"], x, cfg.norm_eps)
+    logits = (x[:, -1, :] @ params["lm_head"]["w"].astype(x.dtype))
+    cache = {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x,
+             "len": jnp.asarray(s, jnp.int32)}
+    return cache, logits.astype(jnp.float32)

@@ -1,0 +1,401 @@
+"""Decoder-only transformer LM (covers 7 of the 10 assigned archs).
+
+Options: GQA/MQA dense attention, MLA (multi-head latent attention,
+minicpm3), MoE FFN (granite-moe, dbrx), GeGLU/SwiGLU, vision-stub prefix
+(internvl2).  Layer stack is lax.scan'd over stacked params so an
+88-layer model lowers to the same HLO size as a 2-layer one.
+
+Protocol (shared by every family in ``repro.models``):
+    init_params(key, cfg)                        -> params pytree
+    train_loss(params, batch, cfg)               -> scalar loss
+    init_cache(cfg, batch, max_len)              -> cache pytree
+    prefill(params, tokens, cfg, visual=None)    -> (cache, last_logits)
+    decode_step(params, cache, token, pos, cfg)  -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.convert import f32_to_posit
+from . import layers as L
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_attention(key, cfg: ModelConfig):
+    d = cfg.d_model
+    if cfg.mla:
+        k = jax.random.split(key, 8)
+        qh = cfg.qk_nope_dim + cfg.qk_rope_dim
+        return {
+            "wdq": L.init_dense(k[0], d, cfg.q_lora_rank),
+            "q_norm": L.init_rms_norm(cfg.q_lora_rank, cfg),
+            "wuq": L.init_dense(k[1], cfg.q_lora_rank, cfg.n_heads * qh),
+            "wdkv": L.init_dense(k[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim),
+            "kv_norm": L.init_rms_norm(cfg.kv_lora_rank, cfg),
+            "wuk": L.init_dense(k[3], cfg.kv_lora_rank,
+                                cfg.n_heads * cfg.qk_nope_dim),
+            "wuv": L.init_dense(k[4], cfg.kv_lora_rank,
+                                cfg.n_heads * cfg.v_head_dim),
+            "wo": L.init_dense(k[5], cfg.n_heads * cfg.v_head_dim, d),
+        }
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": L.init_dense(k1, d, cfg.n_heads * cfg.head_dim),
+        "wk": L.init_dense(k2, d, cfg.n_kv_heads * cfg.head_dim),
+        "wv": L.init_dense(k3, d, cfg.n_kv_heads * cfg.head_dim),
+        "wo": L.init_dense(k4, cfg.n_heads * cfg.head_dim, d),
+    }
+
+
+def _init_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.init_rms_norm(cfg.d_model, cfg),
+        "attn": _init_attention(k1, cfg),
+        "ln2": L.init_rms_norm(cfg.d_model, cfg),
+    }
+    if cfg.is_moe:
+        p["moe"] = L.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 4)
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_block(k, cfg))(layer_keys)
+    params = {
+        "tok_embed": jax.random.normal(
+            keys[1], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02,
+        "layers": layers,
+        "final_norm": L.init_rms_norm(cfg.d_model, cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_dense(keys[2], cfg.d_model, cfg.vocab)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# attention forward (dense + MLA)
+# ---------------------------------------------------------------------------
+
+def _attn_forward(p, x, positions, cfg: ModelConfig):
+    b, s, d = x.shape
+    if cfg.mla:
+        q_lat = L.rms_norm(p["q_norm"], L.dense(p["wdq"], x, cfg), cfg)
+        q = L.dense(p["wuq"], q_lat, cfg).reshape(
+            b, s, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
+        q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+        q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+        dkv = L.dense(p["wdkv"], x, cfg)
+        c_kv, k_rope = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+        c_kv = L.rms_norm(p["kv_norm"], c_kv, cfg)
+        k_rope = L.apply_rope(k_rope[:, :, None, :], positions,
+                              cfg.rope_theta)                   # (B,S,1,r)
+        k_nope = L.dense(p["wuk"], c_kv, cfg).reshape(
+            b, s, cfg.n_heads, cfg.qk_nope_dim)
+        v = L.dense(p["wuv"], c_kv, cfg).reshape(
+            b, s, cfg.n_heads, cfg.v_head_dim)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(
+                k_rope, (b, s, cfg.n_heads, cfg.qk_rope_dim))], -1)
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        out = L.flash_attention(q, k, v, causal=True, cfg=cfg)
+        out = out.reshape(b, s, cfg.n_heads * cfg.v_head_dim)
+        return L.dense(p["wo"], out, cfg), (c_kv, k_rope[:, :, 0, :])
+
+    q = L.dense(p["wq"], x, cfg).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x, cfg).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], x, cfg).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    out = L.flash_attention(q, k, v, causal=True, cfg=cfg,
+                            window=cfg.sliding_window)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return L.dense(p["wo"], out, cfg), (k, v)
+
+
+def _block_forward(p, x, positions, cfg: ModelConfig):
+    a, kv = _attn_forward(p["attn"], L.rms_norm(p["ln1"], x, cfg),
+                          positions, cfg)
+    x = x + a
+    h = L.rms_norm(p["ln2"], x, cfg)
+    f = L.moe(p["moe"], h, cfg) if cfg.is_moe else L.mlp(p["mlp"], h, cfg)
+    return x + f, kv
+
+
+def _sp_constraint(x, cfg: ModelConfig):
+    """Megatron-SP: keep residual activations sequence-sharded over the
+    'model' axis between blocks (no-op without a mesh context)."""
+    if not cfg.seq_shard_activations:
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P
+        return lax.with_sharding_constraint(
+            x, P(tuple(cfg.batch_axes), "model", None))
+    except (ValueError, RuntimeError, TypeError, NameError):
+        return x
+
+
+def _run_layers(params, x, positions, cfg: ModelConfig):
+    def body(h, lp):
+        h = _sp_constraint(h, cfg)
+        h, _ = _block_forward(lp, h, positions, cfg)
+        return h, None
+
+    if cfg.remat == "layer":
+        # save the (small) MoE output so backward does not replay the
+        # dispatch gathers/scatters (§Perf, dbrx train)
+        policy = jax.checkpoint_policies.save_only_these_names("moe_out") \
+            if cfg.is_moe else None
+        body = jax.checkpoint(body, policy=policy)
+    x, _ = lax.scan(body, x, params["layers"])
+    return x
+
+
+def _embed(params, tokens, cfg: ModelConfig, visual=None):
+    x = params["tok_embed"][tokens].astype(L.cdtype(cfg))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.n_visual_tokens and visual is not None:
+        # prepend the (stub) patch embeddings; total length stays S
+        nv = cfg.n_visual_tokens
+        x = jnp.concatenate(
+            [visual.astype(x.dtype), x[:, : x.shape[1] - nv]], axis=1)
+    return x
+
+
+def _unembed_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["tok_embed"].T
+    return L.maybe_dequant(params["lm_head"]["w"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# training loss (chunked over sequence to bound logits memory)
+# ---------------------------------------------------------------------------
+
+def train_loss(params, batch, cfg: ModelConfig):
+    """batch: {'tokens': (B,S) int32, 'mask': (B,S) f32, ['visual': ...]}
+    Next-token cross entropy, vocab projection chunked over the sequence."""
+    tokens = batch["tokens"]
+    mask = batch.get("mask")
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None, :]
+    x = _embed(params, tokens, cfg, batch.get("visual"))
+    x = _run_layers(params, x, positions, cfg)
+    x = L.rms_norm(params["final_norm"], x, cfg)
+
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros((b, 1), tokens.dtype)], axis=1)
+    label_mask = jnp.ones((b, s), jnp.float32)
+    label_mask = label_mask.at[:, -1].set(0.0)
+    if mask is not None:
+        label_mask = label_mask * mask
+    if cfg.n_visual_tokens:
+        label_mask = label_mask.at[:, : cfg.n_visual_tokens].set(0.0)
+
+    w = _unembed_weight(params, cfg).astype(x.dtype)
+    ck = min(cfg.loss_chunk, s)
+    n_chunks = s // ck
+    assert s % ck == 0
+
+    def chunk_loss(ci):
+        xs = lax.dynamic_slice_in_dim(x, ci * ck, ck, 1)
+        ls = lax.dynamic_slice_in_dim(labels, ci * ck, ck, 1)
+        ms = lax.dynamic_slice_in_dim(label_mask, ci * ck, ck, 1)
+        logits = (xs @ w).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], -1)[..., 0]
+        return ((logz - gold) * ms).sum(), ms.sum()
+
+    losses, counts = lax.map(chunk_loss, jnp.arange(n_chunks))
+    return losses.sum() / jnp.maximum(counts.sum(), 1.0)
+
+
+def logits_fn(params, tokens, cfg: ModelConfig, visual=None):
+    """Full-sequence logits (small models / examples only)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None, :]
+    x = _embed(params, tokens, cfg, visual)
+    x = _run_layers(params, x, positions, cfg)
+    x = L.rms_norm(params["final_norm"], x, cfg)
+    return (x @ _unembed_weight(params, cfg).astype(x.dtype)).astype(
+        jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode_step
+# ---------------------------------------------------------------------------
+
+def _cache_dtype(cfg: ModelConfig):
+    if cfg.kv_posit:
+        return L.pcfg(cfg.kv_posit).storage_dtype
+    return L.cdtype(cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.mla:
+        shape_c = (cfg.n_layers, batch, max_len, cfg.kv_lora_rank)
+        shape_r = (cfg.n_layers, batch, max_len, cfg.qk_rope_dim)
+        return {
+            "c_kv": jnp.zeros(shape_c, _cache_dtype(cfg)),
+            "k_rope": jnp.zeros(shape_r, _cache_dtype(cfg)),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    window = cfg.sliding_window or 0
+    t = min(max_len, window) if window else max_len
+    shape = (cfg.n_layers, batch, t, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, _cache_dtype(cfg)),
+        "v": jnp.zeros(shape, _cache_dtype(cfg)),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _maybe_quant_kv(x, cfg: ModelConfig):
+    if cfg.kv_posit:
+        return f32_to_posit(x.astype(jnp.float32), L.pcfg(cfg.kv_posit))
+    return x.astype(L.cdtype(cfg))
+
+
+def prefill(params, tokens, cfg: ModelConfig, visual=None):
+    """Run the full prompt, return (cache, logits at the last position)."""
+    b, s = tokens.shape
+    positions = jnp.arange(s)[None, :]
+    x = _embed(params, tokens, cfg, visual)
+
+    def body(h, lp):
+        h2, kv = _block_forward(lp, h, positions, cfg)
+        return h2, tuple(_maybe_quant_kv(t, cfg) for t in kv)
+
+    body = jax.checkpoint(body) if cfg.remat == "layer" else body
+    x, kvs = lax.scan(body, x, params["layers"])
+    x = L.rms_norm(params["final_norm"], x, cfg)
+    last = x[:, -1:, :]
+    logits = (last @ _unembed_weight(params, cfg).astype(x.dtype))
+
+    if cfg.mla:
+        cache = {"c_kv": kvs[0], "k_rope": kvs[1],
+                 "len": jnp.asarray(s, jnp.int32)}
+    else:
+        cache = {"k": kvs[0], "v": kvs[1], "len": jnp.asarray(s, jnp.int32)}
+    return cache, logits[:, 0, :].astype(jnp.float32)
+
+
+def _decode_attn_dense(p, x, k_cache, v_cache, pos, cfg: ModelConfig):
+    b = x.shape[0]
+    q = L.dense(p["wq"], x, cfg).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x, cfg).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], x, cfg).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = L.apply_rope(q, pos[None, None], cfg.rope_theta)
+    k = L.apply_rope(k, pos[None, None], cfg.rope_theta)
+
+    k_cache = lax.dynamic_update_slice_in_dim(
+        k_cache, _maybe_quant_kv(k, cfg), pos, 1)
+    v_cache = lax.dynamic_update_slice_in_dim(
+        v_cache, _maybe_quant_kv(v, cfg), pos, 1)
+    out = L.decode_attention(
+        q, k_cache, v_cache, pos + 1, cfg=cfg, kv_posit=cfg.kv_posit)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return L.dense(p["wo"], out, cfg), k_cache, v_cache
+
+
+def _decode_attn_mla(p, x, c_cache, r_cache, pos, cfg: ModelConfig):
+    """Absorbed-matrix MLA decode: attend in the compressed latent space."""
+    b = x.shape[0]
+    q_lat = L.rms_norm(p["q_norm"], L.dense(p["wdq"], x, cfg), cfg)
+    q = L.dense(p["wuq"], q_lat, cfg).reshape(
+        b, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope[:, None], pos[None, None],
+                          cfg.rope_theta)[:, 0]
+
+    dkv = L.dense(p["wdkv"], x, cfg)                      # (B,1,rank+rope)
+    c_new, r_new = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    c_new = L.rms_norm(p["kv_norm"], c_new, cfg)
+    r_new = L.apply_rope(r_new[:, :, None, :], pos[None, None],
+                         cfg.rope_theta)[:, :, 0, :]
+    c_cache = lax.dynamic_update_slice_in_dim(
+        c_cache, _maybe_quant_kv(c_new, cfg), pos, 1)
+    r_cache = lax.dynamic_update_slice_in_dim(
+        r_cache, _maybe_quant_kv(r_new, cfg), pos, 1)
+
+    c = c_cache
+    r = r_cache
+    if cfg.kv_posit:
+        from repro.core.convert import posit_to_f32
+        c = posit_to_f32(c, L.pcfg(cfg.kv_posit))
+        r = posit_to_f32(r, L.pcfg(cfg.kv_posit))
+    c = c.astype(jnp.float32)
+    r = r.astype(jnp.float32)
+
+    wuk = L.maybe_dequant(p["wuk"]["w"], cfg).reshape(
+        cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_dim)
+    # absorb: q_eff[h] = q_nope[h] @ wuk[:,h,:].T  -> latent-space query
+    q_lat_eff = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32), wuk)
+    scores = jnp.einsum("bhr,btr->bht", q_lat_eff, c)
+    scores += jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32), r)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    t_len = c.shape[1]
+    valid = jnp.arange(t_len)[None, None, :] <= pos
+    scores = jnp.where(valid, scores * scale, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bht,btr->bhr", probs, c)        # (B,H,rank)
+    wuv = L.maybe_dequant(p["wuv"]["w"], cfg).reshape(
+        cfg.kv_lora_rank, cfg.n_heads, cfg.v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", ctx_lat, wuv)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.v_head_dim).astype(x.dtype)
+    return L.dense(p["wo"], out, cfg), c_cache, r_cache
+
+
+def decode_step(params, cache, token, cfg: ModelConfig):
+    """token: (B,) int32 -> (logits (B,V) f32, new cache)."""
+    pos = cache["len"]
+    x = params["tok_embed"][token][:, None, :].astype(L.cdtype(cfg))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    if cfg.mla:
+        def body(h, layer):
+            lp, c_c, r_c = layer
+            a, c_c, r_c = _decode_attn_mla(
+                lp["attn"], L.rms_norm(lp["ln1"], h, cfg), c_c, r_c, pos, cfg)
+            h = h + a
+            hh = L.rms_norm(lp["ln2"], h, cfg)
+            f = L.moe(lp["moe"], hh, cfg) if cfg.is_moe else \
+                L.mlp(lp["mlp"], hh, cfg)
+            return h + f, (c_c, r_c)
+
+        x, (c_new, r_new) = lax.scan(
+            body, x, (params["layers"], cache["c_kv"], cache["k_rope"]))
+        new_cache = {"c_kv": c_new, "k_rope": r_new, "len": pos + 1}
+    else:
+        def body(h, layer):
+            lp, k_c, v_c = layer
+            a, k_c, v_c = _decode_attn_dense(
+                lp["attn"], L.rms_norm(lp["ln1"], h, cfg), k_c, v_c, pos, cfg)
+            h = h + a
+            hh = L.rms_norm(lp["ln2"], h, cfg)
+            f = L.moe(lp["moe"], hh, cfg) if cfg.is_moe else \
+                L.mlp(lp["mlp"], hh, cfg)
+            return h + f, (k_c, v_c)
+
+        x, (k_new, v_new) = lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": k_new, "v": v_new, "len": pos + 1}
+
+    x = L.rms_norm(params["final_norm"], x, cfg)
+    logits = (x[:, 0, :] @ _unembed_weight(params, cfg).astype(x.dtype))
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,90 @@
+"""AdamW with global-norm clipping and optional posit16 moment storage.
+
+Posit moment storage is the paper's technique applied to optimizer memory:
+the second moment has a huge dynamic range and a tapered-precision profile
+(most mass near the small end) — exactly what posit encoding favors.
+Stored as uint16 patterns (half the bytes of f32), decoded at update time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.convert import f32_to_posit, posit_to_f32
+from repro.core.types import POSIT16
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    posit_moments: bool = False   # store m in posit16 (paper technique)
+
+
+def _q(x, on):
+    return f32_to_posit(x, POSIT16) if on else x
+
+
+def _dq(x, on):
+    return posit_to_f32(x, POSIT16) if on else x
+
+
+def init(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    m = jax.tree.map(lambda p: _q(zeros(p), cfg.posit_moments), params)
+    v = jax.tree.map(zeros, params)
+    return {"m": m, "v": v, "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state, params, cfg: AdamWConfig,
+           lr_scale: Optional[jnp.ndarray] = None):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * (lr_scale if lr_scale is not None else 1.0)
+
+    def upd(p, g, m, v):
+        m_f = _dq(m, cfg.posit_moments)
+        m_new = b1 * m_f + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p_new = p.astype(jnp.float32) * (1 - lr * cfg.weight_decay) \
+            - lr * step
+        return (p_new.astype(p.dtype), _q(m_new, cfg.posit_moments), v_new)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in flat])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in flat])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in flat])
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm}
+
+
+def cosine_schedule(step, *, base_lr=1.0, warmup=100, total=10000,
+                    min_frac=0.1):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

@@ -1,0 +1,136 @@
+"""Train/serve step factories (pjit-ready, posit-compressed cross-pod DP).
+
+Two train-step flavors:
+
+* ``standard``  — loss over the ('pod','data')-sharded global batch;
+  GSPMD inserts f32 gradient all-reduces.
+* ``compressed`` (multi-pod + cfg.grad_compress) — the **pod-tiled**
+  formulation: params are broadcast to a leading [n_pods] axis sharded
+  P('pod'); vmap makes every pod's gradient *local* (no automatic
+  cross-pod reduction), then the sync is explicit:
+
+      buf   = g_pod + error_pod            (error feedback, pod-local)
+      q     = posit16(buf)                 (uint16)
+      q_rep = with_sharding_constraint(q, replicated-over-pod)
+              -> the all-gather on the wire moves *posit patterns*
+      g_hat = mean_p dequant(q_rep)
+
+  The HLO then contains a u16 all-gather instead of an f32 all-reduce on
+  the pod axis — half the cross-pod bytes (quarter with posit8), which
+  the dry-run's collective analysis measures (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compress import gradient as gc
+from repro.models import get_family
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    *, n_pods: int = 1, compressed: bool = False,
+                    total_steps: int = 10_000):
+    fam = get_family(cfg)
+
+    def loss_fn(params, batch):
+        return fam.train_loss(params, batch, cfg)
+
+    accum = max(1, cfg.grad_accum)
+
+    def _grads_of(params, batch):
+        """(loss, grads), microbatched when cfg.grad_accum > 1.
+
+        Gradient accumulation divides activation memory by ``accum`` at
+        the cost of one f32 gradient buffer (params-sized, sharded like
+        the params) — the standard memory lever for big train cells.
+        """
+        if accum == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        micro = jax.tree.map(
+            lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+            batch)
+
+        def mb(carry, mbatch):
+            lsum, gsum = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (lsum + loss, gsum), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (lsum, gsum), _ = jax.lax.scan(mb, (0.0, zeros), micro)
+        inv = 1.0 / accum
+        return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    if not compressed or n_pods <= 1 or not cfg.grad_compress:
+        def train_step(params, opt_state, batch, step):
+            loss, grads = _grads_of(params, batch)
+            lr_scale = adamw.cosine_schedule(step, total=total_steps)
+            params, opt_state, metrics = adamw.update(
+                grads, opt_state, params, opt_cfg, lr_scale)
+            return params, opt_state, {"loss": loss, **metrics}
+        return train_step
+
+    wire = cfg.grad_compress
+
+    def train_step(params, opt_state, ef_state, batch, step):
+        # tile params over the pod axis; vmap keeps gradients pod-local
+        tiled = jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (n_pods,) + p.shape),
+            params)
+        tiled = jax.lax.with_sharding_constraint(
+            tiled, jax.tree.map(lambda _: P("pod"), params))
+
+        def pod_loss(p_pod, b_pod):
+            return loss_fn(p_pod, b_pod)
+
+        losses, grads_tiled = jax.vmap(
+            jax.value_and_grad(pod_loss))(tiled, batch)
+        loss = losses.mean()
+
+        # error-feedback compress (pod-local, sharded P('pod', ...))
+        q, ef_state = gc.compress_with_feedback(grads_tiled, ef_state, wire)
+        # the wire: force replication of the *patterns* over 'pod'
+        q_rep = jax.lax.with_sharding_constraint(
+            q, jax.tree.map(lambda _: P(None), params))
+        g_hat = jax.tree.map(lambda t: t.mean(axis=0),
+                             gc.decompress(q_rep, wire))
+
+        lr_scale = adamw.cosine_schedule(step, total=total_steps)
+        params, opt_state, metrics = adamw.update(
+            g_hat, opt_state, params, opt_cfg, lr_scale)
+        return params, opt_state, ef_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, cache, token) -> (logits, cache)."""
+    fam = get_family(cfg)
+
+    def serve_step(params, cache, token):
+        return fam.decode_step(params, cache, token, cfg)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    fam = get_family(cfg)
+
+    def prefill_step(params, batch):
+        kwargs = {}
+        if "frames" in batch:
+            kwargs["frames"] = batch["frames"]
+        if "visual" in batch:
+            kwargs["visual"] = batch["visual"]
+        return fam.prefill(params, batch["tokens"], cfg, **kwargs)
+
+    return prefill_step

@@ -1,0 +1,79 @@
+"""Fault tolerance: crash/resume supervisor + straggler watchdog."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.runtime.fault import StragglerWatchdog, TrainSupervisor
+
+
+def test_supervisor_recovers_from_failures(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    sup = TrainSupervisor(ck, save_every=5, max_restarts=3)
+    crashed = {"done": False}
+
+    def fail_hook(step):
+        if step == 12 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    def step_fn(state, step):
+        return {"x": state["x"] + 1}
+
+    state, executed = sup.run(state={"x": jnp.asarray(0)},
+                              step_fn=step_fn, total_steps=20,
+                              fail_hook=fail_hook)
+    # deterministic step function: final state == total steps regardless
+    # of the replayed work after resume
+    assert int(state["x"]) == 20
+    kinds = [e[0] for e in sup.events]
+    assert "failure" in kinds and "resume" in kinds
+    assert executed > 20                       # some steps were replayed
+
+
+def test_supervisor_gives_up_after_max_restarts(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    sup = TrainSupervisor(ck, save_every=100, max_restarts=2)
+
+    def fail_hook(step):
+        raise RuntimeError("always failing")
+
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        sup.run(state={"x": jnp.asarray(0)},
+                step_fn=lambda s, i: s, total_steps=10,
+                fail_hook=fail_hook)
+
+
+def test_supervisor_resumes_fresh_process(tmp_path):
+    """Simulates preemption: a NEW supervisor picks up the checkpoint."""
+    ck1 = Checkpointer(str(tmp_path), keep=2)
+    sup1 = TrainSupervisor(ck1, save_every=5)
+
+    def boom(step):
+        if step == 8:
+            raise KeyboardInterrupt()
+
+    try:
+        sup1.run(state={"x": jnp.asarray(0)},
+                 step_fn=lambda s, i: {"x": s["x"] + 1},
+                 total_steps=20, fail_hook=boom)
+    except BaseException:
+        pass
+    ck1.wait()          # the in-flight async save lands before "reboot"
+    ck2 = Checkpointer(str(tmp_path), keep=2)
+    sup2 = TrainSupervisor(ck2, save_every=5)
+    state, _ = sup2.run(state={"x": jnp.asarray(0)},
+                        step_fn=lambda s, i: {"x": s["x"] + 1},
+                        total_steps=20)
+    assert int(state["x"]) == 20
+    assert ("resume", 5) in sup2.events
+
+
+def test_straggler_watchdog():
+    wd = StragglerWatchdog(threshold=2.0, warmup=3)
+    flags = [wd.observe(t) for t in
+             [1.0, 1.0, 1.0, 1.1, 0.9, 5.0, 1.0, 1.05, 4.0]]
+    assert flags[5] is True and flags[8] is True
+    assert sum(flags) == 2
+    assert wd.stragglers == 2

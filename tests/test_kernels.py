@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, bit-exact."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.types import POSIT8, POSIT16, POSIT32, PositConfig
+from repro.kernels import ops, ref
+
+CODEC_CFGS = [POSIT8, POSIT16, POSIT32, PositConfig(16, 1)]
+SHAPES_2D = [(8, 128), (256, 512), (100, 130), (1, 1), (3, 7)]
+
+
+def _rand_f32(rng, shape):
+    return (rng.standard_normal(shape) *
+            np.exp(rng.uniform(-10, 10, shape))).astype(np.float32)
+
+
+@pytest.mark.parametrize("cfg", CODEC_CFGS, ids=lambda c: c.name)
+@pytest.mark.parametrize("shape", SHAPES_2D)
+def test_codec_quantize_matches_ref(cfg, shape):
+    rng = np.random.default_rng(hash((cfg.nbits, shape)) % 2 ** 31)
+    x = jnp.asarray(_rand_f32(rng, shape))
+    got = np.asarray(ops.quantize(x, cfg))
+    want = np.asarray(ref.quantize_2d_ref(x, cfg))
+    assert got.dtype == want.dtype
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("cfg", CODEC_CFGS, ids=lambda c: c.name)
+@pytest.mark.parametrize("shape", [(16, 256), (33, 5)])
+def test_codec_dequantize_matches_ref(cfg, shape):
+    rng = np.random.default_rng(1)
+    pats = rng.integers(0, 2 ** cfg.nbits, size=shape, dtype=np.uint64)
+    p = jnp.asarray(pats.astype(np.uint32)).astype(cfg.storage_dtype)
+    got = np.asarray(ops.dequantize(p, cfg))
+    want = np.asarray(ref.dequantize_2d_ref(p, cfg))
+    both_nan = np.isnan(got) & np.isnan(want)
+    assert ((got == want) | both_nan).all()
+
+
+def test_codec_roundtrip_high_rank():
+    cfg = POSIT16
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(_rand_f32(rng, (3, 5, 64)))
+    p = ops.quantize(x, cfg)
+    assert p.shape == x.shape
+    back = ops.dequantize(p, cfg)
+    # every posit16 value is f32-exact, so roundtrip == direct quantization
+    want = np.asarray(ref.dequantize_2d_ref(ref.quantize_2d_ref(x, cfg), cfg))
+    assert (np.asarray(back) == want).all()
+
+
+@pytest.mark.parametrize("cfg", [POSIT16, POSIT8], ids=lambda c: c.name)
+@pytest.mark.parametrize("mkn", [(16, 32, 8), (128, 256, 128), (33, 65, 17),
+                                 (256, 128, 512)])
+def test_posit_gemm_matches_ref(cfg, mkn):
+    m, k, n = mkn
+    rng = np.random.default_rng(hash((cfg.nbits, mkn)) % 2 ** 31)
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    w = rng.integers(0, 2 ** cfg.nbits, size=(k, n), dtype=np.uint64)
+    # avoid NaR weights (a real checkpoint never contains NaR)
+    w[w == cfg.nar_pattern] = 0
+    wp = jnp.asarray(w.astype(np.uint32)).astype(cfg.storage_dtype)
+    got = np.asarray(ops.gemm(a, wp, cfg))
+    want = np.asarray(ref.posit_gemm_ref(a, wp, cfg))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("cfg", [POSIT32, POSIT16], ids=lambda c: c.name)
+@pytest.mark.parametrize("rl", [(4, 16), (128, 64), (57, 33)])
+def test_vpdot_kernel_bit_exact(cfg, rl):
+    rows, length = rl
+    rng = np.random.default_rng(hash((cfg.nbits, rl)) % 2 ** 31)
+    a = rng.integers(0, 2 ** cfg.nbits, size=(rows, length),
+                     dtype=np.uint64).astype(np.uint32)
+    b = rng.integers(0, 2 ** cfg.nbits, size=(rows, length),
+                     dtype=np.uint64).astype(np.uint32)
+    ja = jnp.asarray(a).astype(cfg.storage_dtype)
+    jb = jnp.asarray(b).astype(cfg.storage_dtype)
+    got = np.asarray(ops.dot_rows(ja, jb, cfg))
+    want = np.asarray(ref.vpdot_rows_ref(ja, jb, cfg))
+    assert (got == want).all()

@@ -1,0 +1,180 @@
+"""Per-architecture smoke tests: a REDUCED config of the same family runs
+one forward + train step + a decode step on CPU; output shapes and
+finiteness are asserted.  (Full configs are exercised only via the
+dry-run's ShapeDtypeStruct lowering.)
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import build
+
+ARCHS = list(configs.ARCH_IDS)
+
+
+def _smoke_batch(cfg, rng, batch=2, seq=32):
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(batch, seq)), jnp.int32)
+    out = {"tokens": tokens}
+    if cfg.family == "whisper":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+    if cfg.n_visual_tokens:
+        out["visual"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_visual_tokens, cfg.d_model)),
+            jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = configs.get_config(arch).reduced()
+    model = build(cfg)
+    rng = np.random.default_rng(0)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = _smoke_batch(cfg, rng)
+
+    loss, grads = jax.value_and_grad(model.train_loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), f"{arch}: non-finite grads"
+    # one SGD step then loss must still be finite (exercises the params)
+    params2 = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype),
+                           params, grads)
+    loss2 = model.train_loss(params2, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_decode_step(arch):
+    cfg = configs.get_config(arch).reduced()
+    model = build(cfg)
+    rng = np.random.default_rng(1)
+    params = model.init_params(jax.random.PRNGKey(1))
+    b, max_len = 2, 64
+    cache = model.init_cache(b, max_len)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, size=(b,)), jnp.int32)
+    logits, cache = model.decode_step(params, cache, tok)
+    assert logits.shape == (b, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: NaN logits"
+    logits2, cache = model.decode_step(params, cache, tok)
+    assert int(cache["len"]) == 2
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize("arch", ["phi3-medium-14b", "minicpm3-4b",
+                                  "rwkv6-7b", "whisper-tiny"])
+def test_prefill_matches_stepwise_decode(arch):
+    """prefill(prompt) must agree with token-by-token decode_step."""
+    # f32 compute: the two paths chunk differently, so bf16 rounding
+    # order would dominate the comparison
+    cfg = configs.get_config(arch).reduced(compute_dtype="float32")
+    model = build(cfg)
+    rng = np.random.default_rng(2)
+    params = model.init_params(jax.random.PRNGKey(2))
+    b, s = 1, 8
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, size=(b, s)), jnp.int32)
+    kwargs = {}
+    if cfg.family == "whisper":
+        kwargs["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+
+    cache_p, logits_p = model.prefill(params, tokens, **kwargs)
+
+    cache = model.init_cache(b, s + 4)
+    if cfg.family == "whisper":
+        # seed the cross-attention cache from prefill (encoder-dependent)
+        cache = dict(cache, ck=cache_p["ck"], cv=cache_p["cv"])
+    logits_s = None
+    for i in range(s):
+        logits_s, cache = model.decode_step(params, cache, tokens[:, i])
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_s),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_chunked_matches_scan():
+    """The chunk-parallel WKV engine must agree with the step recurrence."""
+    from repro.models import rwkv6
+    rng = np.random.default_rng(3)
+    b, s, h, n = 2, 32, 3, 8
+    r, k, v = (jnp.asarray(rng.standard_normal((b, s, h, n)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.2, 0.99, (b, s, h, n)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((h, n)), jnp.float32)
+    st = jnp.asarray(rng.standard_normal((b, h, n, n)), jnp.float32)
+    o1, s1 = rwkv6.wkv_scan(r, k, v, w, u, st)
+    o2, s2 = rwkv6.wkv_chunked(r, k, v, w, u, st, chunk=8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_chunked_matches_step():
+    """The chunked SSD engine must agree with stepwise decode updates."""
+    from repro.models.hymba import ssd_chunked, ssd_step
+    rng = np.random.default_rng(4)
+    b, s, h, p, n = 2, 16, 3, 4, 5
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    bi = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    ci = jnp.asarray(rng.standard_normal((b, s, n)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 1.0, (b, s, h)), jnp.float32)
+    a_log = jnp.asarray(rng.uniform(-1, 0.5, (h,)), jnp.float32)
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    y_c, h_c = ssd_chunked(x, bi, ci, dt, a_log, h0, chunk=4)
+
+    hs = h0
+    ys = []
+    for t in range(s):
+        y, hs = ssd_step(x[:, t], bi[:, t], ci[:, t], dt[:, t], a_log, hs)
+        ys.append(y)
+    y_s = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_s),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(hs),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_matches_naive():
+    from repro.models import layers as L
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(attn_chunk_q=8, attn_chunk_kv=8)
+    rng = np.random.default_rng(5)
+    b, s, h, g, d = 2, 32, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, g, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, g, d)), jnp.float32)
+    out = L.flash_attention(q, k, v, causal=True, cfg=cfg)
+
+    # naive reference
+    kk = jnp.repeat(k, h // g, axis=2)
+    vv = jnp.repeat(v, h // g, axis=2)
+    sc = jnp.einsum("bshd,bthd->bhst", q, kk) * d ** -0.5
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    ref = jnp.einsum("bhst,bthd->bshd", jax.nn.softmax(sc, -1), vv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_cond_skip_equivalent():
+    from repro.models import layers as L
+    from repro.models.config import ModelConfig
+    rng = np.random.default_rng(6)
+    b, s, h, d = 1, 64, 2, 8
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    c1 = ModelConfig(attn_chunk_q=16, attn_chunk_kv=16, causal_skip="mask")
+    c2 = ModelConfig(attn_chunk_q=16, attn_chunk_kv=16, causal_skip="cond")
+    o1 = L.flash_attention(q, k, v, causal=True, cfg=c1)
+    o2 = L.flash_attention(q, k, v, causal=True, cfg=c2)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,121 @@
+"""Hypothesis property tests for the posit core's algebraic invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (f32_to_posit, posit_to_f32, vpadd, vpdiv, vpmul,
+                        vpneg, vpsub)
+from repro.core import softposit_ref as ref
+from repro.core.types import POSIT16, POSIT32, PositConfig
+
+pat16 = st.integers(min_value=0, max_value=2 ** 16 - 1)
+pat32 = st.integers(min_value=0, max_value=2 ** 32 - 1)
+
+
+def _np(p):
+    return np.asarray(p).astype(np.uint32)
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=pat16, b=pat16)
+def test_add_commutative(a, b):
+    cfg = POSIT16
+    ja, jb = jnp.asarray([a], jnp.uint32), jnp.asarray([b], jnp.uint32)
+    assert _np(vpadd(ja, jb, cfg))[0] == _np(vpadd(jb, ja, cfg))[0]
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=pat16, b=pat16)
+def test_mul_commutative(a, b):
+    cfg = POSIT16
+    ja, jb = jnp.asarray([a], jnp.uint32), jnp.asarray([b], jnp.uint32)
+    assert _np(vpmul(ja, jb, cfg))[0] == _np(vpmul(jb, ja, cfg))[0]
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=pat16, b=pat16)
+def test_sub_is_add_neg(a, b):
+    cfg = POSIT16
+    ja, jb = jnp.asarray([a], jnp.uint32), jnp.asarray([b], jnp.uint32)
+    assert _np(vpsub(ja, jb, cfg))[0] == _np(vpadd(ja, vpneg(jb, cfg), cfg))[0]
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=pat16)
+def test_add_zero_identity(a):
+    cfg = POSIT16
+    ja = jnp.asarray([a], jnp.uint32)
+    z = jnp.asarray([0], jnp.uint32)
+    assert _np(vpadd(ja, z, cfg))[0] == a
+
+
+@settings(max_examples=200, deadline=None)
+@given(a=pat16)
+def test_x_minus_x_is_zero(a):
+    cfg = POSIT16
+    if a == cfg.nar_pattern:
+        return
+    ja = jnp.asarray([a], jnp.uint32)
+    assert _np(vpsub(ja, ja, cfg))[0] == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=pat16)
+def test_div_self_is_one(a):
+    cfg = POSIT16
+    if a == cfg.nar_pattern or a == 0:
+        return
+    ja = jnp.asarray([a], jnp.uint32)
+    one = ref.from_float(1.0, cfg)
+    assert _np(vpdiv(ja, ja, cfg, mode="exact"))[0] == one
+    assert _np(vpdiv(ja, ja, cfg, mode="nr3"))[0] == one  # pow2 fast path
+
+
+@settings(max_examples=150, deadline=None)
+@given(a=pat32, b=pat32)
+def test_add_matches_golden_posit32(a, b):
+    cfg = POSIT32
+    got = _np(vpadd(jnp.asarray([a], jnp.uint32),
+                    jnp.asarray([b], jnp.uint32), cfg))[0]
+    assert got == ref.add(a, b, cfg)
+
+
+@settings(max_examples=150, deadline=None)
+@given(a=pat32, b=pat32)
+def test_mul_matches_golden_posit32(a, b):
+    cfg = POSIT32
+    got = _np(vpmul(jnp.asarray([a], jnp.uint32),
+                    jnp.asarray([b], jnp.uint32), cfg))[0]
+    assert got == ref.mul(a, b, cfg)
+
+
+@settings(max_examples=100, deadline=None)
+@given(x=st.floats(allow_nan=False, allow_infinity=False, width=32))
+def test_f32_roundtrip_monotone_and_close(x):
+    """quant_dequant is a contraction around representable values and the
+    pattern encoding is monotone in value."""
+    cfg = POSIT32
+    p = f32_to_posit(jnp.asarray([x], jnp.float32), cfg)
+    back = float(posit_to_f32(p, cfg)[0])
+    if x != 0:
+        assert np.sign(back) == np.sign(x)          # sign always survives
+        if 1e-4 <= abs(x) <= 1e4:
+            # >= 23 fraction bits in this band: roundtrip is f32-exact
+            assert back == x
+
+
+@settings(max_examples=60, deadline=None)
+@given(vals=st.lists(st.floats(min_value=-100, max_value=100,
+                               allow_nan=False, width=32),
+                     min_size=2, max_size=16))
+def test_encoding_monotone(vals):
+    """Posit patterns (as two's-complement ints) sort like their values."""
+    cfg = POSIT16
+    x = np.asarray(vals, np.float32)
+    pats = _np(f32_to_posit(jnp.asarray(x), cfg))
+    signed = pats.astype(np.int32)
+    signed = np.where(signed >= 2 ** 15, signed - 2 ** 16, signed)
+    decoded = np.asarray([ref.to_float(int(p), cfg) for p in pats])
+    order_p = np.argsort(signed, kind="stable")
+    assert (np.diff(decoded[order_p]) >= 0).all()

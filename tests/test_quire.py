@@ -1,0 +1,65 @@
+"""Exact 512-bit quire (Posit Standard 2022) — beyond-paper vpdot mode."""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import f32_to_posit, vpdot
+from repro.core import softposit_ref as ref
+from repro.core.types import POSIT16, POSIT32
+
+
+def test_quire_matches_golden_random():
+    rng = np.random.default_rng(21)
+    rows, length = 40, 16
+    a = rng.integers(0, 2 ** 32, size=(rows, length), dtype=np.uint32)
+    b = rng.integers(0, 2 ** 32, size=(rows, length), dtype=np.uint32)
+    got = np.asarray(vpdot(jnp.asarray(a), jnp.asarray(b), POSIT32,
+                           mode="quire")).astype(np.uint32)
+    want = np.array([ref.dot(a[i], b[i], POSIT32) for i in range(rows)],
+                    dtype=np.uint32)
+    assert (got == want).all()
+
+
+def test_quire_exact_under_catastrophic_cancellation():
+    """Exponent spread of 160 bits: beyond the 128-bit quire-lite window
+    but exact in the 512-bit standard quire."""
+    big, tiny = float(2.0 ** 40), float(2.0 ** -40)
+    a = np.asarray(f32_to_posit(
+        jnp.asarray([[big, -big, tiny]], jnp.float32), POSIT32))
+    b = np.asarray(f32_to_posit(
+        jnp.asarray([[big, big, tiny]], jnp.float32), POSIT32))
+    want = ref.dot(a[0], b[0], POSIT32)
+
+    lite = int(np.asarray(vpdot(jnp.asarray(a), jnp.asarray(b), POSIT32,
+                                mode="quire_lite"))[0])
+    exact = int(np.asarray(vpdot(jnp.asarray(a), jnp.asarray(b), POSIT32,
+                                 mode="quire"))[0])
+    assert exact == want                      # 2^80 - 2^80 + 2^-80 exact
+    assert lite != want                       # documents the lite limit
+
+
+def test_quire_posit16():
+    rng = np.random.default_rng(22)
+    rows, length = 30, 8
+    a = rng.integers(0, 2 ** 16, size=(rows, length),
+                     dtype=np.uint32)
+    b = rng.integers(0, 2 ** 16, size=(rows, length),
+                     dtype=np.uint32)
+    got = np.asarray(vpdot(jnp.asarray(a), jnp.asarray(b), POSIT16,
+                           mode="quire")).astype(np.uint32)
+    want = np.array([ref.dot(a[i], b[i], POSIT16) for i in range(rows)],
+                    dtype=np.uint32)
+    assert (got == want).all()
+
+
+def test_quire_zero_and_nar():
+    cfg = POSIT32
+    one = np.uint32(ref.from_float(1.0, cfg))
+    nar = np.uint32(cfg.nar_pattern)
+    a = jnp.asarray([[one, one], [one, nar], [0, 0]], jnp.uint32)
+    b = jnp.asarray([[one, (-int(one)) & cfg.mask], [one, one], [0, 0]],
+                    jnp.uint32)
+    out = np.asarray(vpdot(a, b, cfg, mode="quire")).astype(np.uint32)
+    assert out[0] == 0                        # 1 - 1 = 0 exactly
+    assert out[1] == cfg.nar_pattern          # NaR propagates
+    assert out[2] == 0

@@ -1,0 +1,122 @@
+"""End-to-end system behaviour: the framework trains, serves, and uses
+the paper's posit features together."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models import get_family
+from repro.optim import adamw
+from repro.runtime import train_loop
+
+
+def test_train_step_improves_loss():
+    """A reduced model must learn on the structured synthetic stream."""
+    cfg = configs.get_config("internvl2-1b").reduced(
+        compute_dtype="float32", n_visual_tokens=0)
+    fam = get_family(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=2e-3, weight_decay=0.0)
+    pipe = Pipeline(DataConfig(seed=2), cfg, global_batch=8, seq_len=64)
+    params = fam.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params, opt_cfg)
+    step = jax.jit(train_loop.make_train_step(cfg, opt_cfg,
+                                              total_steps=60))
+    losses = []
+    for i in range(60):
+        params, opt, m = step(params, opt, pipe.batch_at(i),
+                              jnp.asarray(i, jnp.int32))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.85, (losses[0], losses[-1])
+    assert np.isfinite(losses).all()
+
+
+def test_posit_moments_train_step_close_to_f32():
+    cfg = configs.get_config("whisper-tiny").reduced(
+        compute_dtype="float32")
+    fam = get_family(cfg)
+    pipe = Pipeline(DataConfig(seed=3), cfg, global_batch=2, seq_len=32)
+    params = fam.init_params(jax.random.PRNGKey(1), cfg)
+    outs = {}
+    for name, pm in (("f32", False), ("posit", True)):
+        opt_cfg = adamw.AdamWConfig(lr=1e-3, posit_moments=pm,
+                                    weight_decay=0.0)
+        opt = adamw.init(params, opt_cfg)
+        step = jax.jit(train_loop.make_train_step(cfg, opt_cfg))
+        p = params
+        for i in range(5):
+            p, opt, m = step(p, opt, pipe.batch_at(i),
+                             jnp.asarray(i, jnp.int32))
+        outs[name] = float(m["loss"])
+    assert abs(outs["f32"] - outs["posit"]) < 0.05 * abs(outs["f32"])
+
+
+@pytest.mark.parametrize("kv", [None, "posit16"])
+def test_serve_roundtrip_with_posit_cache(kv):
+    cfg = configs.get_config("gemma-7b").reduced(compute_dtype="float32")
+    cfg = dataclasses.replace(cfg, kv_posit=kv)
+    fam = get_family(cfg)
+    params = fam.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, (2, 12)), jnp.int32)
+    cache, logits = fam.prefill(params, tokens, cfg)
+    assert np.isfinite(np.asarray(logits)).all()
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(4):
+        logits, cache = fam.decode_step(params, cache, tok, cfg)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert int(cache["len"]) == 16
+
+
+def test_posit16_kv_cache_matches_f32_generations():
+    cfg0 = configs.get_config("phi3-medium-14b").reduced(
+        compute_dtype="float32")
+    fam = get_family(cfg0)
+    params = fam.init_params(jax.random.PRNGKey(3), cfg0)
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(1, cfg0.vocab, (2, 16)), jnp.int32)
+
+    def gen(cfg):
+        cache, logits = fam.prefill(params, tokens, cfg)
+        out = [int(t) for t in np.asarray(jnp.argmax(logits, -1))]
+        outs = [out]
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for _ in range(6):
+            logits, cache = fam.decode_step(params, cache, tok, cfg)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            outs.append([int(t) for t in np.asarray(tok)])
+        return outs
+
+    a = gen(cfg0)
+    b = gen(dataclasses.replace(cfg0, kv_posit="posit16"))
+    agree = np.mean([x == y for x, y in zip(np.ravel(a), np.ravel(b))])
+    assert agree >= 0.85, (a, b)
+
+
+def test_grad_accum_matches_full_batch():
+    """grad_accum=2 must produce the same update as the full batch."""
+    cfg1 = configs.get_config("whisper-tiny").reduced(
+        compute_dtype="float32")
+    cfg2 = dataclasses.replace(cfg1, grad_accum=2)
+    fam = get_family(cfg1)
+    pipe = Pipeline(DataConfig(seed=8), cfg1, global_batch=4, seq_len=32)
+    params = fam.init_params(jax.random.PRNGKey(5), cfg1)
+    batch = pipe.batch_at(0)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3)
+    outs = []
+    for cfg in (cfg1, cfg2):
+        opt = adamw.init(params, opt_cfg)
+        step = jax.jit(train_loop.make_train_step(cfg, opt_cfg))
+        p, o, m = step(params, opt, batch, jnp.asarray(0, jnp.int32))
+        outs.append((p, float(m["loss"])))
+    assert abs(outs[0][1] - outs[1][1]) < 1e-5
+    for a, b in zip(jax.tree.leaves(outs[0][0]),
+                    jax.tree.leaves(outs[1][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
