@@ -1,0 +1,91 @@
+"""Fused elementwise PVU kernels vs the f32 round-trip: throughput table.
+
+For each op (vadd/vsub/vmul/vdiv) x config (posit8e2/posit16e2) x vector
+length, times:
+
+* ``fused``     — ``kernels.ops.v*``: one Pallas pass, decode -> PIR
+  arith -> encode, patterns in / patterns out;
+* ``roundtrip`` — the composition it replaces: ``dequantize`` kernel ->
+  f32 op -> ``quantize`` kernel (three passes, two roundings, plus an
+  f32 temporary 2-4x the pattern bytes).
+
+Emits ``name,us_per_call,derived`` rows (harness contract); ``derived``
+carries the fused/roundtrip speedup and the bit-match rate between the
+two paths (expected 1.0 for add/sub/mul — the fused path is exactly
+rounded, and the double rounding of the round-trip is innocuous at these
+widths — and < 1.0 for div mode='nr3', the paper's ~95.8 % divider).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import POSIT8, POSIT16
+from repro.kernels import ops
+
+CFGS = (POSIT8, POSIT16)
+# interpret-mode friendly lengths; on real TPU (interpret=False) push
+# these to 2^20+ — the fused kernel's advantage grows with size.
+LENGTHS = (1 << 12, 1 << 16, 1 << 18)
+REPEATS = 3
+
+
+def _patterns(rng, cfg, n):
+    p = rng.integers(0, 2 ** cfg.nbits, size=n, dtype=np.uint64)
+    p[p == cfg.nar_pattern] = 1          # keep the sweep NaR-free
+    return jnp.asarray(p.astype(np.uint32)).astype(cfg.storage_dtype)
+
+
+def _time(fn):
+    jax.block_until_ready(fn())           # compile + warm cache
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / REPEATS * 1e6
+
+
+def run():
+    rng = np.random.default_rng(123)
+    rows = []
+    for cfg in CFGS:
+        for n in LENGTHS:
+            a = _patterns(rng, cfg, n)
+            b = _patterns(rng, cfg, n)
+
+            f32_ops = {"vadd": jnp.add, "vsub": jnp.subtract,
+                       "vmul": jnp.multiply, "vdiv": jnp.divide}
+
+            def roundtrip(op_name):
+                return ops.quantize(
+                    f32_ops[op_name](ops.dequantize(a, cfg),
+                                     ops.dequantize(b, cfg)), cfg)
+
+            fused_fns = {
+                "vadd": lambda: ops.vadd(a, b, cfg),
+                "vsub": lambda: ops.vsub(a, b, cfg),
+                "vmul": lambda: ops.vmul(a, b, cfg),
+                "vdiv": lambda: ops.vdiv(a, b, cfg, mode="nr3"),
+            }
+            for op_name, fused_fn in fused_fns.items():
+                us_fused = _time(fused_fn)
+                us_rt = _time(lambda: roundtrip(op_name))
+                match = float(
+                    (np.asarray(fused_fn()) ==
+                     np.asarray(roundtrip(op_name))).mean())
+                rows.append((
+                    f"ew_{op_name}_{cfg.name}_n{n}", us_fused,
+                    f"roundtrip_us={us_rt:.1f} "
+                    f"speedup={us_rt / max(us_fused, 1e-9):.2f}x "
+                    f"bit_match={match:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -41,7 +41,7 @@ def main():
     p_sh2 = sharding.param_shardings(params, mesh2)
     params = jax.device_put(params, p_sh2)
     losses = []
-    with jax.set_mesh(mesh2):
+    with sharding.set_mesh(mesh2):
         for i in range(20):
             params, opt, m = step_fn(params, opt, pipe.batch_at(i),
                                      jnp.asarray(i, jnp.int32))
@@ -59,7 +59,7 @@ def main():
     }
     state, step0 = ckpt.restore(20, template, shardings=sh1)
     params1, opt1 = state["params"], state["opt"]
-    with jax.set_mesh(mesh1):
+    with sharding.set_mesh(mesh1):
         resumed = []
         for i in range(step0, step0 + 10):
             params1, opt1, m = step_fn(params1, opt1, pipe.batch_at(i),

@@ -1,8 +1,9 @@
 """Quickstart: the PVU vector ISA in five minutes.
 
 Shows the five paper ops (vpadd/vpsub/vpmul/vpdiv/vpdot) on posit32
-vectors, f32 conversion, the accuracy-vs-golden table, and the Pallas
-codec kernel.
+vectors, f32 conversion, the accuracy-vs-golden table, the Pallas codec
+kernel, and the fused Pallas elementwise kernels (vadd/vsub/vmul/vdiv on
+posit patterns — no f32 round-trip).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -62,6 +63,24 @@ def main():
     err = float(jnp.abs(back - m).max() / jnp.abs(m).max())
     print(f"quantize->dequantize (64x128): storage {patterns.dtype}, "
           f"max rel err {err:.2e}")
+
+    print("\n=== 5. fused elementwise kernels (stay in the posit domain) ===")
+    m2 = jnp.asarray(rng.standard_normal((64, 128)).astype(np.float32))
+    q2 = ops.quantize(m2, POSIT16)
+    # decode -> PIR add -> encode in one Pallas pass; nothing touches f32
+    fused = ops.vadd(patterns, q2, POSIT16)
+    roundtrip = ops.quantize(ops.dequantize(patterns, POSIT16) +
+                             ops.dequantize(q2, POSIT16), POSIT16)
+    print(f"fused vadd == dequant->f32 add->requant on "
+          f"{100 * float((fused == roundtrip).mean()):.2f}% of 64x128 "
+          f"(fused rounds once, the round-trip twice)")
+    half = ops.quantize(jnp.float32(0.5), POSIT16)   # scalar broadcast
+    scaled = ops.vmul(patterns, half, POSIT16)
+    print(f"fused scalar vmul by 0.5: max |fused - f32 path| = "
+          f"{float(jnp.abs(ops.dequantize(scaled, POSIT16) - back * 0.5).max()):.2e}")
+    ratio = ops.vdiv(patterns, q2, POSIT16, mode='exact')
+    nar = int((np.asarray(ratio) == POSIT16.nar_pattern).sum())
+    print(f"fused exact vdiv: {nar} NaR lanes (x/0) out of {ratio.size}")
 
 
 if __name__ == "__main__":

@@ -3,6 +3,13 @@
 The models quantize/dequantize inline (see ``models/*.py``); these helpers
 quantize an *existing* cache tree (e.g. after prefill in f32) and report
 compression ratios for the benchmarks.
+
+Cache *maintenance* ops (``scale_cache``, ``merge_caches``) stay entirely
+in the posit domain via the fused Pallas elementwise kernels
+(``repro.kernels.ops``): one decode->arith->encode pass per element
+instead of the dequantize -> f32 op -> requantize round-trip, so a cache
+rescale (attention-sink discounting, temperature folding) or a
+speculative-decoding cache merge rounds once, not twice.
 """
 from __future__ import annotations
 
@@ -10,7 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.convert import f32_to_posit, posit_to_f32
-from .gradient import pcfg_of
+from repro.kernels import ops as kops
+from .gradient import pcfg_of, scalar_pattern
 
 
 def quantize_cache(cache, name: str):
@@ -37,3 +45,57 @@ def dequantize_cache(cache, name: str):
 
 def cache_bytes(cache) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+# ---------------------------------------------------------------------------
+# Posit-domain cache maintenance (fused elementwise kernels)
+# ---------------------------------------------------------------------------
+
+def _is_patterns(x) -> bool:
+    return jnp.issubdtype(x.dtype, jnp.unsignedinteger)
+
+
+def scale_cache(cache, factor: float, name: str, interpret: bool = True):
+    """Multiply every quantized leaf by ``factor`` in the posit domain.
+
+    Non-pattern leaves (lengths, positions) pass through untouched.
+    """
+    cfg = pcfg_of(name)
+    s = scalar_pattern(factor, cfg)
+
+    def one(x):
+        if _is_patterns(x):
+            return kops.vmul(x, s, cfg, interpret=interpret)
+        return x
+
+    return jax.tree.map(one, cache)
+
+
+def merge_caches(cache_a, cache_b, name: str, weight_a: float = 0.5,
+                 interpret: bool = True):
+    """Blend two quantized caches: ``wa * a + (1 - wa) * b``, fused.
+
+    Three posit-domain ops (two vmul, one vadd) — each exactly rounded —
+    versus two full dequantize passes, three f32 ops, and a requantize.
+
+    Non-pattern leaves (lengths, positions) must agree between the two
+    caches — blending the K/V contents of caches with different metadata
+    would silently produce an inconsistent cache, so that is an error.
+    """
+    cfg = pcfg_of(name)
+    wa = scalar_pattern(weight_a, cfg)
+    wb = scalar_pattern(1.0 - float(weight_a), cfg)
+
+    def one(a, b):
+        if _is_patterns(a) and _is_patterns(b):
+            return kops.vadd(kops.vmul(a, wa, cfg, interpret=interpret),
+                             kops.vmul(b, wb, cfg, interpret=interpret),
+                             cfg, interpret=interpret)
+        if a.shape != b.shape or not bool(jnp.all(a == b)):
+            raise ValueError(
+                "merge_caches: non-pattern (metadata) leaves differ "
+                f"between caches: shapes {a.shape} vs {b.shape}; refusing "
+                "to blend K/V contents of inconsistent caches")
+        return a
+
+    return jax.tree.map(one, cache_a, cache_b)

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import PositConfig
-from . import posit_codec, posit_dot, posit_gemm
+from . import posit_codec, posit_dot, posit_ew, posit_gemm
 
 
 def _as_2d(x):
@@ -83,3 +83,55 @@ def dot_rows(a_patterns, b_patterns, cfg: PositConfig,
     """Bit-exact PVU dot product per row: (R, L) -> (R,)."""
     return posit_dot.vpdot_rows(a_patterns, b_patterns, cfg,
                                 interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Fused elementwise PVU ops (posit patterns in -> posit patterns out)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "op", "div_mode", "interpret"))
+def _elementwise(a, b, cfg: PositConfig, op: str, div_mode: str = "nr3",
+                 interpret: bool = True):
+    """Shared pad-to-block wrapper: broadcast, flatten to 2D, dispatch."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    shape = jnp.broadcast_shapes(a.shape, b.shape)
+    a = jnp.broadcast_to(a, shape).astype(cfg.storage_dtype)
+    b = jnp.broadcast_to(b, shape).astype(cfg.storage_dtype)
+    a2, _ = _as_2d(a)
+    b2, _ = _as_2d(b)
+    bm, bn = posit_ew.DEFAULT_BLOCK
+    bm = min(bm, a2.shape[0])
+    bn = min(bn, a2.shape[1])
+    ap, m, n = _pad_to(a2, bm, bn)
+    bp, _, _ = _pad_to(b2, bm, bn)
+    out = posit_ew.elementwise_2d(ap, bp, cfg, op, div_mode=div_mode,
+                                  block=(bm, bn), interpret=interpret)
+    return out[:m, :n].reshape(shape)
+
+
+def vadd(a, b, cfg: PositConfig, interpret: bool = True):
+    """Fused posit add: patterns (any rank, broadcastable) -> patterns."""
+    return _elementwise(a, b, cfg, "add", interpret=interpret)
+
+
+def vsub(a, b, cfg: PositConfig, interpret: bool = True):
+    """Fused posit subtract on patterns."""
+    return _elementwise(a, b, cfg, "sub", interpret=interpret)
+
+
+def vmul(a, b, cfg: PositConfig, interpret: bool = True):
+    """Fused posit multiply on patterns."""
+    return _elementwise(a, b, cfg, "mul", interpret=interpret)
+
+
+def vdiv(a, b, cfg: PositConfig, mode: str = "nr3",
+         interpret: bool = True):
+    """Fused posit divide on patterns.
+
+    mode='nr3' is the paper-faithful Newton-Raphson divider;
+    mode='exact' the beyond-paper exactly-rounded restoring divider.
+    """
+    return _elementwise(a, b, cfg, "div", div_mode=mode,
+                        interpret=interpret)

@@ -24,6 +24,10 @@ from repro.core.types import PositConfig
 
 DEFAULT_BLOCKS = (256, 256, 256)  # bm, bk, bn
 
+# jax renamed TPUCompilerParams -> CompilerParams (0.4.x -> 0.5+)
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _gemm_kernel(a_ref, w_ref, o_ref, *, cfg: PositConfig):
     k = pl.program_id(2)
@@ -58,7 +62,7 @@ def posit_gemm(a, w_patterns, cfg: PositConfig, blocks=DEFAULT_BLOCKS,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, w_patterns)

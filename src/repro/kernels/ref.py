@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.convert import f32_to_posit, posit_to_f32
-from repro.core.posit import vpdot
+from repro.core.posit import vpadd, vpdiv, vpdot, vpmul, vpsub
 from repro.core.types import PositConfig
 
 
@@ -27,3 +27,29 @@ def posit_gemm_ref(a, w_patterns, cfg: PositConfig):
 
 def vpdot_rows_ref(a_patterns, b_patterns, cfg: PositConfig):
     return vpdot(a_patterns, b_patterns, cfg, axis=-1)
+
+
+def elementwise_ref(a_patterns, b_patterns, cfg: PositConfig, op: str,
+                    div_mode: str = "nr3"):
+    """Pure-jnp PIR datapath the fused kernel must match bit-exactly."""
+    if op == "add":
+        return vpadd(a_patterns, b_patterns, cfg)
+    if op == "sub":
+        return vpsub(a_patterns, b_patterns, cfg)
+    if op == "mul":
+        return vpmul(a_patterns, b_patterns, cfg)
+    if op == "div":
+        return vpdiv(a_patterns, b_patterns, cfg, mode=div_mode)
+    raise ValueError(f"unknown elementwise op {op!r}")
+
+
+def elementwise_roundtrip_ref(a_patterns, b_patterns, cfg: PositConfig,
+                              op: str):
+    """The dequantize -> f32 op -> quantize composition the fused kernel
+    replaces.  Double-rounded (f32 RNE then posit RNE), so it can only be
+    *less* accurate than the fused single-rounding datapath."""
+    fa = posit_to_f32(a_patterns, cfg)
+    fb = posit_to_f32(b_patterns, cfg)
+    f = {"add": jnp.add, "sub": jnp.subtract,
+         "mul": jnp.multiply, "div": jnp.divide}[op]
+    return f32_to_posit(f(fa, fb), cfg)

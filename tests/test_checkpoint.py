@@ -54,6 +54,7 @@ def test_interrupted_save_never_corrupts(tmp_path):
     assert np.isfinite(np.asarray(restored["layers"]["w"])).all()
 
 
+@pytest.mark.slow
 def test_posit_payload_roundtrip_accuracy(tmp_path):
     ck = Checkpointer(str(tmp_path), keep=1, posit_payload=True)
     t = _tree(3)

@@ -1,12 +1,16 @@
 """Posit gradient compression: error-feedback correctness + convergence."""
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.compress import gradient as gc
+from repro.compress import kvcache as kv
 from repro.compress.kvcache import cache_bytes, dequantize_cache, \
     quantize_cache
+from repro.core import softposit_ref as golden
+from repro.core.types import POSIT16
 
 
 def test_compress_decompress_close():
@@ -25,6 +29,7 @@ def test_compress_decompress_close():
         np.asarray(g["w"]) - np.asarray(back["w"]), atol=1e-12)
 
 
+@pytest.mark.slow
 def test_error_feedback_accumulates_small_gradients():
     """posit8 alone would flush tiny gradients; EF must recover them."""
     g = {"w": jnp.full((32,), 1e-4, jnp.float32)}   # tiny but consistent
@@ -37,6 +42,7 @@ def test_error_feedback_accumulates_small_gradients():
     np.testing.assert_allclose(total, 200 * 1e-4 * np.ones(32), rtol=0.05)
 
 
+@pytest.mark.slow
 def test_ef_sgd_converges_on_quadratic():
     """EF-compressed SGD reaches the optimum of a quadratic."""
     rng = np.random.default_rng(1)
@@ -90,3 +96,82 @@ def test_posit_moment_adamw_tracks_f32():
         pb, sb, _ = adamw.update(g, sb, pb, cfg_b)
     np.testing.assert_allclose(np.asarray(pb["w"]), np.asarray(pa["w"]),
                                rtol=2e-2, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Posit-domain wire-format reductions / cache maintenance (fused kernels)
+# ---------------------------------------------------------------------------
+
+def _golden_vec(fn, a, b, cfg=POSIT16):
+    return np.array([fn(int(x), int(y), cfg)
+                     for x, y in zip(np.ravel(a), np.ravel(b))],
+                    np.uint32).reshape(np.shape(a))
+
+
+def _rand_wire(rng, shape, cfg=POSIT16):
+    p = rng.integers(0, 2 ** cfg.nbits, size=shape, dtype=np.uint64)
+    p[p == cfg.nar_pattern] = 1
+    return p.astype(np.uint32)
+
+
+def test_combine_and_scale_compressed_match_golden():
+    """Wire-format add/scale == the SoftPosit golden, element by element
+    (single rounding — no f32 round-trip anywhere)."""
+    rng = np.random.default_rng(11)
+    a = _rand_wire(rng, (32,))
+    b = _rand_wire(rng, (32,))
+    qa = {"w": jnp.asarray(a).astype(POSIT16.storage_dtype)}
+    qb = {"w": jnp.asarray(b).astype(POSIT16.storage_dtype)}
+    got = np.asarray(gc.combine_compressed(qa, qb, "posit16")["w"])
+    assert (got.astype(np.uint32) == _golden_vec(golden.add, a, b)).all()
+
+    s = 0.25
+    spat = np.full_like(a, golden.from_float(s, POSIT16))
+    got_s = np.asarray(gc.scale_compressed(qa, s, "posit16")["w"])
+    assert (got_s.astype(np.uint32) == _golden_vec(golden.mul, a, spat)).all()
+
+
+def test_mean_compressed_matches_golden_pairwise_tree():
+    """mean over a power-of-two pod axis == pairwise golden adds followed
+    by an exact (never-rounding) divide by the pod count."""
+    rng = np.random.default_rng(12)
+    pods = 4
+    q = _rand_wire(rng, (pods, 16))
+    tree = {"w": jnp.asarray(q).astype(POSIT16.storage_dtype)}
+    got = np.asarray(gc.mean_compressed(tree, "posit16")["w"])
+    s01 = _golden_vec(golden.add, q[0], q[1])
+    s23 = _golden_vec(golden.add, q[2], q[3])
+    total = _golden_vec(golden.add, s01, s23)
+    npat = np.full_like(total, golden.from_float(float(pods), POSIT16))
+    want = _golden_vec(golden.div, total, npat)
+    assert (got.astype(np.uint32) == want).all()
+
+
+def test_cache_scale_and_merge_posit_domain():
+    """scale_cache/merge_caches transform pattern leaves in the posit
+    domain, pass metadata through, and refuse inconsistent metadata."""
+    rng = np.random.default_rng(13)
+    k = _rand_wire(rng, (2, 8))
+    v = _rand_wire(rng, (2, 8))
+    mk = lambda kk, vv, ln: {
+        "k": jnp.asarray(kk).astype(POSIT16.storage_dtype),
+        "v": jnp.asarray(vv).astype(POSIT16.storage_dtype),
+        "length": jnp.asarray(ln, jnp.int32)}
+    cache = mk(k, v, 8)
+
+    half = np.full_like(k, golden.from_float(0.5, POSIT16))
+    scaled = kv.scale_cache(cache, 0.5, "posit16")
+    assert (np.asarray(scaled["k"]).astype(np.uint32)
+            == _golden_vec(golden.mul, k, half)).all()
+    assert int(scaled["length"]) == 8          # metadata untouched
+
+    other = mk(_rand_wire(rng, (2, 8)), _rand_wire(rng, (2, 8)), 8)
+    merged = kv.merge_caches(cache, other, "posit16", weight_a=0.5)
+    wk = _golden_vec(golden.add,
+                     _golden_vec(golden.mul, k, half),
+                     _golden_vec(golden.mul,
+                                 np.asarray(other["k"], np.uint32), half))
+    assert (np.asarray(merged["k"]).astype(np.uint32) == wk).all()
+
+    with pytest.raises(ValueError, match="metadata"):
+        kv.merge_caches(cache, mk(k, v, 10), "posit16")

@@ -4,11 +4,23 @@ import pytest
 
 import jax.numpy as jnp
 
+from repro.core import softposit_ref as golden
 from repro.core.types import POSIT8, POSIT16, POSIT32, PositConfig
 from repro.kernels import ops, ref
 
+# Long interpret-mode sweeps (big tiles, wide configs) run on the full
+# lane only; the fast PR lane (-m "not slow") keeps one representative
+# per axis.  See pyproject.toml [tool.pytest.ini_options].
+_slow = pytest.mark.slow
+
 CODEC_CFGS = [POSIT8, POSIT16, POSIT32, PositConfig(16, 1)]
-SHAPES_2D = [(8, 128), (256, 512), (100, 130), (1, 1), (3, 7)]
+SHAPES_2D = [(8, 128), pytest.param((256, 512), marks=_slow),
+             pytest.param((100, 130), marks=_slow), (1, 1), (3, 7)]
+
+EW_OPS = {"add": ops.vadd, "sub": ops.vsub, "mul": ops.vmul,
+          "div": lambda a, b, cfg: ops.vdiv(a, b, cfg, mode="exact")}
+EW_GOLDEN = {"add": golden.add, "sub": golden.sub, "mul": golden.mul,
+             "div": golden.div}
 
 
 def _rand_f32(rng, shape):
@@ -52,8 +64,10 @@ def test_codec_roundtrip_high_rank():
 
 
 @pytest.mark.parametrize("cfg", [POSIT16, POSIT8], ids=lambda c: c.name)
-@pytest.mark.parametrize("mkn", [(16, 32, 8), (128, 256, 128), (33, 65, 17),
-                                 (256, 128, 512)])
+@pytest.mark.parametrize("mkn", [(16, 32, 8),
+                                 pytest.param((128, 256, 128), marks=_slow),
+                                 (33, 65, 17),
+                                 pytest.param((256, 128, 512), marks=_slow)])
 def test_posit_gemm_matches_ref(cfg, mkn):
     m, k, n = mkn
     rng = np.random.default_rng(hash((cfg.nbits, mkn)) % 2 ** 31)
@@ -67,7 +81,142 @@ def test_posit_gemm_matches_ref(cfg, mkn):
     np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
 
 
-@pytest.mark.parametrize("cfg", [POSIT32, POSIT16], ids=lambda c: c.name)
+# ---------------------------------------------------------------------------
+# Fused elementwise kernels (posit_ew)
+# ---------------------------------------------------------------------------
+
+def _edge_patterns(cfg):
+    """Zero, NaR, maxpos, minpos and their negations — the encode/decode
+    edge cases every elementwise op must propagate correctly."""
+    return np.array([0, cfg.nar_pattern, cfg.maxpos_pattern, 1,
+                     (-1) & cfg.mask,
+                     (-cfg.maxpos_pattern) & cfg.mask], np.uint32)
+
+
+def _rand_patterns(cfg, n, seed):
+    rng = np.random.default_rng(seed)
+    pats = rng.integers(0, 2 ** cfg.nbits, size=n, dtype=np.uint64)
+    return np.concatenate([_edge_patterns(cfg),
+                           pats.astype(np.uint32)])
+
+
+@pytest.mark.parametrize("cfg", [POSIT8, POSIT16,
+                                 pytest.param(POSIT32, marks=_slow),
+                                 pytest.param(PositConfig(16, 1),
+                                              marks=_slow)],
+                         ids=lambda c: c.name)
+@pytest.mark.parametrize("op", sorted(EW_OPS))
+def test_elementwise_kernel_matches_golden(cfg, op):
+    """Golden-value check: fused kernel == SoftPosit-semantics golden for
+    add/sub/mul/div(exact), including NaR/zero/sign edge cases."""
+    a = _rand_patterns(cfg, 200, seed=hash((cfg.nbits, cfg.es, op)) % 2**31)
+    b = _rand_patterns(cfg, 200, seed=hash((op, cfg.es, cfg.nbits)) % 2**31)
+    # cross every edge pattern with every other edge pattern too
+    edges = _edge_patterns(cfg)
+    ea = np.repeat(edges, edges.size)
+    eb = np.tile(edges, edges.size)
+    a, b = np.concatenate([a, ea]), np.concatenate([b, eb])
+    ja = jnp.asarray(a).astype(cfg.storage_dtype)
+    jb = jnp.asarray(b).astype(cfg.storage_dtype)
+    got = np.asarray(EW_OPS[op](ja, jb, cfg)).astype(np.uint32)
+    want = np.array([EW_GOLDEN[op](int(x), int(y), cfg)
+                     for x, y in zip(a, b)], np.uint32)
+    bad = np.nonzero(got != want)[0]
+    assert bad.size == 0, (
+        f"{op} {cfg.name}: {bad.size} mismatches; first at "
+        f"a={a[bad[0]]:#x} b={b[bad[0]]:#x} got={got[bad[0]]:#x} "
+        f"want={want[bad[0]]:#x}")
+
+
+@pytest.mark.parametrize("cfg", [POSIT8, POSIT16], ids=lambda c: c.name)
+@pytest.mark.parametrize("op", ["add", "mul"])
+def test_elementwise_fused_bit_identical_to_roundtrip(cfg, op):
+    """Acceptance criterion: fused vadd/vmul == dequantize -> f32 op ->
+    quantize, bit for bit, on posit8e2 and posit16e2.
+
+    Both paths are exactly rounded here: the fused kernel by construction
+    (single RNE from the exact PIR result), the round-trip because the
+    double rounding is innocuous at these widths — a posit16e2
+    significand has <= 12 bits, so products (<= 24 bits) are f32-exact,
+    and for sums the f32 ulp sits so far below the posit rounding
+    position that the second rounding cannot cross a posit midpoint."""
+    if cfg.nbits == 8:
+        pats = np.arange(256, dtype=np.uint32)          # exhaustive
+        a = np.repeat(pats, 256)
+        b = np.tile(pats, 256)
+    else:
+        rng = np.random.default_rng(7)
+        a = rng.integers(0, 2 ** 16, 200_000, dtype=np.uint64)
+        a = a.astype(np.uint32)
+        b = rng.integers(0, 2 ** 16, 200_000, dtype=np.uint64)
+        b = b.astype(np.uint32)
+    ja = jnp.asarray(a).astype(cfg.storage_dtype)
+    jb = jnp.asarray(b).astype(cfg.storage_dtype)
+    got = np.asarray(EW_OPS[op](ja, jb, cfg))
+    want = np.asarray(ref.elementwise_roundtrip_ref(ja, jb, cfg, op))
+    bad = np.nonzero(got != want)[0]
+    assert bad.size == 0, (
+        f"{op} {cfg.name}: {bad.size} fused/round-trip mismatches; first "
+        f"a={a[bad[0]]:#x} b={b[bad[0]]:#x}")
+
+
+@pytest.mark.parametrize("cfg", [POSIT16,
+                                 pytest.param(POSIT32, marks=_slow)],
+                         ids=lambda c: c.name)
+@pytest.mark.parametrize("op", sorted(EW_OPS))
+@pytest.mark.parametrize("shape", [(1, 1), (3, 7), (100, 130),
+                                   pytest.param((256, 512), marks=_slow)])
+def test_elementwise_kernel_matches_jnp_datapath(cfg, op, shape):
+    """The Pallas kernel must be bit-identical to the pure-jnp PIR
+    datapath (core.posit.vp*) across block/pad boundaries."""
+    rng = np.random.default_rng(hash((cfg.nbits, op, shape)) % 2 ** 31)
+    a = rng.integers(0, 2 ** cfg.nbits, size=shape, dtype=np.uint64)
+    b = rng.integers(0, 2 ** cfg.nbits, size=shape, dtype=np.uint64)
+    ja = jnp.asarray(a.astype(np.uint32)).astype(cfg.storage_dtype)
+    jb = jnp.asarray(b.astype(np.uint32)).astype(cfg.storage_dtype)
+    got = np.asarray(EW_OPS[op](ja, jb, cfg))
+    dm = "exact" if op == "div" else "nr3"
+    want = np.asarray(ref.elementwise_ref(ja, jb, cfg, op, div_mode=dm))
+    assert got.dtype == want.dtype
+    assert (got == want).all()
+
+
+def test_elementwise_nr3_divider_in_kernel():
+    """The paper-faithful NR-3 divider runs inside the kernel too and
+    matches the jnp datapath bit for bit (including its residual error)."""
+    cfg = POSIT32
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 2 ** 32, 4096, dtype=np.uint64).astype(np.uint32)
+    b = rng.integers(0, 2 ** 32, 4096, dtype=np.uint64).astype(np.uint32)
+    ja, jb = jnp.asarray(a), jnp.asarray(b)
+    got = np.asarray(ops.vdiv(ja, jb, cfg, mode="nr3"))
+    want = np.asarray(ref.elementwise_ref(ja, jb, cfg, "div",
+                                          div_mode="nr3"))
+    assert (got == want).all()
+
+
+def test_elementwise_scalar_broadcast():
+    """Scalar (and degenerate-axis) operands broadcast like jnp."""
+    cfg = POSIT16
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 2 ** 16, size=(6, 40), dtype=np.uint64)
+    ja = jnp.asarray(a.astype(np.uint32)).astype(cfg.storage_dtype)
+    half = jnp.asarray(golden.from_float(0.5, cfg), cfg.storage_dtype)
+    got = np.asarray(ops.vmul(ja, half, cfg))
+    assert got.shape == (6, 40)
+    want = np.asarray(ref.elementwise_ref(
+        ja, jnp.broadcast_to(half, ja.shape), cfg, "mul"))
+    assert (got == want).all()
+    # row vector against matrix
+    row = ja[:1]
+    got2 = np.asarray(ops.vadd(ja, row, cfg))
+    want2 = np.asarray(ref.elementwise_ref(
+        ja, jnp.broadcast_to(row, ja.shape), cfg, "add"))
+    assert got2.shape == (6, 40) and (got2 == want2).all()
+
+
+@pytest.mark.parametrize("cfg", [pytest.param(POSIT32, marks=_slow),
+                                 POSIT16], ids=lambda c: c.name)
 @pytest.mark.parametrize("rl", [(4, 16), (128, 64), (57, 33)])
 def test_vpdot_kernel_bit_exact(cfg, rl):
     rows, length = rl

@@ -30,6 +30,7 @@ def _smoke_batch(cfg, rng, batch=2, seq=32):
     return out
 
 
+@pytest.mark.slow          # ~1 min across archs; decode-step smoke stays fast
 @pytest.mark.parametrize("arch", ARCHS)
 def test_reduced_train_step(arch):
     cfg = configs.get_config(arch).reduced()
@@ -67,6 +68,7 @@ def test_reduced_decode_step(arch):
     assert np.isfinite(np.asarray(logits2)).all()
 
 
+@pytest.mark.slow          # full prefill + per-token decode across archs
 @pytest.mark.parametrize("arch", ["phi3-medium-14b", "minicpm3-4b",
                                   "rwkv6-7b", "whisper-tiny"])
 def test_prefill_matches_stepwise_decode(arch):

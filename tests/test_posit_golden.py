@@ -66,6 +66,7 @@ def test_exact_ops_match_golden_100pct(cfg, op):
         f"want={want[bad[0]]:#x}")
 
 
+@pytest.mark.slow          # 256x256 pattern grid through the Fraction golden
 def test_posit8_exhaustive_add_mul():
     """Exhaustive sweep over a full pattern grid for posit8."""
     cfg = PositConfig(8, 2)

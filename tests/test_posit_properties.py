@@ -1,5 +1,11 @@
 """Hypothesis property tests for the posit core's algebraic invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt); skipping instead of aborting collection")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
@@ -8,6 +14,8 @@ from repro.core import (f32_to_posit, posit_to_f32, vpadd, vpdiv, vpmul,
                         vpneg, vpsub)
 from repro.core import softposit_ref as ref
 from repro.core.types import POSIT16, POSIT32, PositConfig
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 pat16 = st.integers(min_value=0, max_value=2 ** 16 - 1)
 pat32 = st.integers(min_value=0, max_value=2 ** 32 - 1)
@@ -103,6 +111,50 @@ def test_f32_roundtrip_monotone_and_close(x):
         if 1e-4 <= abs(x) <= 1e4:
             # >= 23 fraction bits in this band: roundtrip is f32-exact
             assert back == x
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=pat16, b=pat16)
+def test_fused_kernel_never_less_accurate_than_roundtrip(a, b):
+    """The fused Pallas elementwise kernels round once (decode -> PIR op ->
+    encode); the dequantize -> f32 op -> requantize composition rounds
+    twice.  So for every op the fused result must be at least as close to
+    the exact real result — and for add/sub/mul (single rounding vs an
+    innocuous double rounding at posit16 widths) bit-identical to it."""
+    cfg = POSIT16
+    if a == cfg.nar_pattern or b == cfg.nar_pattern:
+        return
+    ja = jnp.asarray([a], jnp.uint32).astype(cfg.storage_dtype)
+    jb = jnp.asarray([b], jnp.uint32).astype(cfg.storage_dtype)
+    cases = [("add", kops.vadd(ja, jb, cfg)),
+             ("sub", kops.vsub(ja, jb, cfg)),
+             ("mul", kops.vmul(ja, jb, cfg)),
+             ("div", kops.vdiv(ja, jb, cfg, mode="exact"))]
+    for op, fused in cases:
+        if op == "div" and b == 0:
+            continue                     # x/0: NaR vs f32-inf edge
+        fused = int(_np(fused)[0])
+        rt = int(_np(kref.elementwise_roundtrip_ref(ja, jb, cfg, op))[0])
+        golden_fn = {"add": ref.add, "sub": ref.sub, "mul": ref.mul,
+                     "div": ref.div}[op]
+        want = golden_fn(a, b, cfg)
+        assert fused == want, (op, hex(a), hex(b))   # exactly rounded
+        if op != "div":
+            assert fused == rt, (op, hex(a), hex(b))
+        # never less accurate: compare |value - exact| via the golden
+        exact_a, exact_b = ref.decode_exact(a, cfg), ref.decode_exact(b, cfg)
+        if exact_a in (ref.ZERO, ref.NAR) or exact_b in (ref.ZERO, ref.NAR):
+            continue
+        exact = {"add": exact_a + exact_b, "sub": exact_a - exact_b,
+                 "mul": exact_a * exact_b, "div": exact_a / exact_b}[op]
+        err_fused = abs(_exact_value(fused, cfg) - exact)
+        err_rt = abs(_exact_value(rt, cfg) - exact)
+        assert err_fused <= err_rt, (op, hex(a), hex(b))
+
+
+def _exact_value(pattern: int, cfg):
+    v = ref.decode_exact(pattern, cfg)
+    return 0 if v in (ref.ZERO, ref.NAR) else v
 
 
 @settings(max_examples=60, deadline=None)

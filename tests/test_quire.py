@@ -1,5 +1,6 @@
 """Exact 512-bit quire (Posit Standard 2022) — beyond-paper vpdot mode."""
 import numpy as np
+import pytest
 
 import jax.numpy as jnp
 
@@ -8,6 +9,7 @@ from repro.core import softposit_ref as ref
 from repro.core.types import POSIT16, POSIT32
 
 
+@pytest.mark.slow          # 40x16 exact-Fraction quire cross-check
 def test_quire_matches_golden_random():
     rng = np.random.default_rng(21)
     rows, length = 40, 16

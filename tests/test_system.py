@@ -5,6 +5,9 @@ import dataclasses
 import numpy as np
 import pytest
 
+# minutes of train/serve loops in f32 on CPU: full lane only
+pytestmark = pytest.mark.slow
+
 import jax
 import jax.numpy as jnp
 
