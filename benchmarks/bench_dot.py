@@ -1,0 +1,100 @@
+"""§IV-E dot product: K-tiled streaming quire vs monolithic vs round-trip.
+
+For each config x reduction length (256 -> 64k), times three paths over
+a (rows, L) batch of posit dots:
+
+* ``tiled``     — ``kernels.ops.dot_rows``: the K-tiled Pallas kernel,
+  quire state streamed across MAX_DOT_LENGTH tiles in VMEM scratch,
+  one rounding total (any length);
+* ``monolithic``— the single-tile kernel (``block_k=L``), only defined
+  for L <= MAX_DOT_LENGTH = 4096 — the old cap this PR removed;
+* ``roundtrip`` — dequantize -> f32 multiply + sum -> quantize: rounds
+  every partial product and the f32 accumulation, so it is the accuracy
+  bar the quire path clears.
+
+Emits ``name,us_per_call,derived`` rows (harness contract); ``derived``
+carries the tiled/monolithic bit-match (expected 1.0 where both exist),
+the tiled-vs-roundtrip match rate, and the roundtrip speed ratio.
+
+``--smoke`` runs two short lengths only — the fast CI lane uses it to
+exercise the tiled kernel's interpret-mode path on every PR.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dot as dot_mod
+from repro.core.types import POSIT16
+from repro.kernels import ops, posit_dot
+
+CFGS = (POSIT16,)
+# interpret-mode friendly batch; on real TPU (interpret=False) scale rows
+ROWS = 4
+LENGTHS = (256, 1024, 4096, 16384, 65536)
+SMOKE_LENGTHS = (256, 8192)        # one single-tile, one multi-tile
+REPEATS = 3
+
+
+def _patterns(rng, cfg, shape):
+    p = rng.integers(0, 2 ** cfg.nbits, size=shape, dtype=np.uint64)
+    p[p == cfg.nar_pattern] = 1          # keep the sweep NaR-free
+    return jnp.asarray(p.astype(np.uint32)).astype(cfg.storage_dtype)
+
+
+def _time(fn):
+    jax.block_until_ready(fn())           # compile + warm cache
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / REPEATS * 1e6
+
+
+def run(smoke: bool = False):
+    rng = np.random.default_rng(321)
+    rows = []
+    for cfg in CFGS:
+        for n in (SMOKE_LENGTHS if smoke else LENGTHS):
+            a = _patterns(rng, cfg, (ROWS, n))
+            b = _patterns(rng, cfg, (ROWS, n))
+
+            def tiled():
+                return ops.dot_rows(a, b, cfg)
+
+            def roundtrip():
+                fa = ops.dequantize(a, cfg)
+                fb = ops.dequantize(b, cfg)
+                return ops.quantize(jnp.sum(fa * fb, axis=-1), cfg)
+
+            us_tiled = _time(tiled)
+            us_rt = _time(roundtrip)
+            rt_match = float(
+                (np.asarray(tiled()) == np.asarray(roundtrip())).mean())
+            derived = (f"roundtrip_us={us_rt:.1f} "
+                       f"rt_ratio={us_rt / max(us_tiled, 1e-9):.2f}x "
+                       f"rt_bit_match={rt_match:.4f}")
+            if n <= dot_mod.MAX_DOT_LENGTH:
+                def mono():
+                    return posit_dot.vpdot_rows(a, b, cfg, block_k=n)
+                us_mono = _time(mono)
+                mono_match = float(
+                    (np.asarray(tiled()) == np.asarray(mono())).mean())
+                derived += (f" monolithic_us={us_mono:.1f} "
+                            f"mono_bit_match={mono_match:.4f}")
+            else:
+                derived += " monolithic_us=NA(beyond_old_cap)"
+            rows.append((f"dot_{cfg.name}_r{ROWS}_n{n}", us_tiled, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv[1:]
+    print("name,us_per_call,derived")
+    for row in run(smoke=smoke):
+        print(",".join(str(x) for x in row))

@@ -71,6 +71,14 @@ def scale_cache(cache, factor: float, name: str, interpret: bool = True):
     return jax.tree.map(one, cache)
 
 
+def _is_tracer(x) -> bool:
+    try:
+        from jax.core import Tracer
+    except ImportError:                      # pragma: no cover - old jax
+        from jax._src.core import Tracer
+    return isinstance(x, Tracer)
+
+
 def merge_caches(cache_a, cache_b, name: str, weight_a: float = 0.5,
                  interpret: bool = True):
     """Blend two quantized caches: ``wa * a + (1 - wa) * b``, fused.
@@ -81,6 +89,11 @@ def merge_caches(cache_a, cache_b, name: str, weight_a: float = 0.5,
     Non-pattern leaves (lengths, positions) must agree between the two
     caches — blending the K/V contents of caches with different metadata
     would silently produce an inconsistent cache, so that is an error.
+    The guard is trace-safe: shape/dtype mismatches raise even under
+    ``jax.jit`` (they are static), while the value-equality check runs
+    only on concrete (non-tracer) leaves — a jitted merge trusts the
+    caller's metadata values, as a host-side guard cannot inspect
+    traced data without aborting the trace.
     """
     cfg = pcfg_of(name)
     wa = scalar_pattern(weight_a, cfg)
@@ -91,11 +104,18 @@ def merge_caches(cache_a, cache_b, name: str, weight_a: float = 0.5,
             return kops.vadd(kops.vmul(a, wa, cfg, interpret=interpret),
                              kops.vmul(b, wb, cfg, interpret=interpret),
                              cfg, interpret=interpret)
-        if a.shape != b.shape or not bool(jnp.all(a == b)):
+        if a.shape != b.shape or a.dtype != b.dtype:
             raise ValueError(
                 "merge_caches: non-pattern (metadata) leaves differ "
-                f"between caches: shapes {a.shape} vs {b.shape}; refusing "
-                "to blend K/V contents of inconsistent caches")
+                f"between caches: {a.shape}/{a.dtype} vs "
+                f"{b.shape}/{b.dtype}; refusing to blend K/V contents "
+                "of inconsistent caches")
+        if (not _is_tracer(a) and not _is_tracer(b)
+                and not bool(jnp.all(a == b))):
+            raise ValueError(
+                "merge_caches: non-pattern (metadata) leaves differ "
+                f"between caches (shape {a.shape}); refusing to blend "
+                "K/V contents of inconsistent caches")
         return a
 
     return jax.tree.map(one, cache_a, cache_b)

@@ -1,0 +1,8 @@
+"""Version shims shared by the Pallas kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams (0.4.x -> 0.5+)
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -9,12 +9,13 @@ flag ``--pallas=native`` does this).
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import PositConfig
-from . import posit_codec, posit_dot, posit_ew, posit_gemm
+from . import posit_codec, posit_dot, posit_ew, posit_gemm, posit_qgemm
 
 
 def _as_2d(x):
@@ -78,11 +79,63 @@ def gemm(a, w_patterns, cfg: PositConfig, interpret: bool = True):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def dot(a_patterns, b_patterns, cfg: PositConfig, interpret: bool = True):
+    """Bit-exact PVU dot product over the trailing axis, any rank.
+
+    Operands broadcast like jnp (a rank-1 vector against a batched
+    stack works); the result drops the contracted axis: (L,) -> scalar,
+    (R, L) -> (R,), (B, R, L) -> (B, R).  Reduction length is unbounded
+    (streamed through the K-tiled quire kernel, one rounding total).
+    """
+    a = jnp.asarray(a_patterns)
+    b = jnp.asarray(b_patterns)
+    if a.ndim == 0 or b.ndim == 0:
+        raise ValueError("dot needs rank >= 1 operands (a reduction axis)")
+    shape = jnp.broadcast_shapes(a.shape, b.shape)
+    a = jnp.broadcast_to(a, shape).astype(cfg.storage_dtype)
+    b = jnp.broadcast_to(b, shape).astype(cfg.storage_dtype)
+    r = math.prod(shape[:-1])     # explicit: -1 can't infer past 0-dims
+    if r == 0 or shape[-1] == 0:  # empty quire -> posit zero pattern
+        return jnp.zeros(shape[:-1], cfg.storage_dtype)
+    a2 = a.reshape(r, shape[-1])
+    b2 = b.reshape(r, shape[-1])
+    out = posit_dot.vpdot_rows(a2, b2, cfg, interpret=interpret)
+    return out.reshape(shape[:-1])
+
+
 def dot_rows(a_patterns, b_patterns, cfg: PositConfig,
              interpret: bool = True):
-    """Bit-exact PVU dot product per row: (R, L) -> (R,)."""
-    return posit_dot.vpdot_rows(a_patterns, b_patterns, cfg,
-                                interpret=interpret)
+    """Bit-exact PVU dot product per row: (..., L) -> (...,).
+
+    Historic name for :func:`dot` (originally (R, L)-only); now fully
+    shape-polymorphic — rank-1 vectors and batched leading dims included.
+    """
+    return dot(a_patterns, b_patterns, cfg, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def pgemm(a_patterns, w_patterns, cfg: PositConfig,
+          interpret: bool = True):
+    """Bit-exact posit matmul: posit (..., K) @ posit (K, N) -> posit
+    (..., N), one quire rounding per output element.
+
+    The posit-in -> posit-out counterpart of :func:`gemm` (which
+    dequantizes and rounds per k-tile in f32 on the MXU): use ``pgemm``
+    for numerics audits, ``gemm`` for throughput.
+    """
+    a = jnp.asarray(a_patterns).astype(cfg.storage_dtype)
+    w = jnp.asarray(w_patterns).astype(cfg.storage_dtype)
+    if w.ndim != 2:
+        raise ValueError(f"pgemm weights must be (K, N), got {w.shape}")
+    if a.ndim == 0:
+        raise ValueError("pgemm needs rank >= 1 activations")
+    k, n = w.shape
+    if a.shape[-1] != k:
+        raise ValueError(
+            f"pgemm contraction mismatch: {a.shape} @ {w.shape}")
+    a2 = a.reshape(math.prod(a.shape[:-1]), k)
+    out = posit_qgemm.posit_qgemm(a2, w, cfg, interpret=interpret)
+    return out.reshape(a.shape[:-1] + (n,))
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,19 @@
-"""Pallas TPU kernel: the faithful PVU vpdot datapath (§IV-E).
+"""Pallas TPU kernel: the faithful PVU vpdot datapath (§IV-E), K-tiled.
 
-One pass of the paper's pipeline per row block, entirely in VMEM:
+One pass of the paper's pipeline per (row, K) tile, entirely in VMEM:
 decode -> elementwise significand multiply (16-bit limb partial products)
--> align to the row max exponent -> 128-bit two's-complement column
-accumulation -> single normalize + RNE encode.
+-> align to the tile max exponent -> 128-bit two's-complement column
+accumulation -> and, *across* K tiles, the streaming quire-lite state
+(limb columns + alignment exponent + sticky + NaR) carried in VMEM
+scratch via ``core.dot.quire_combine``.  The single normalize + RNE
+encode happens once, on the last K step — so reductions of any length
+round exactly once, and a reduction that fits one tile is bit-identical
+to the original monolithic kernel.
 
 This is the numerics-audit kernel (bit-exact posit dot products for
 verification tables); the throughput path for large GEMMs is
-``posit_gemm`` (dequant + MXU).
+``posit_gemm`` (dequant + MXU), and the bit-exact posit-in -> posit-out
+matmul built on the same streaming quire is ``posit_qgemm``.
 """
 from __future__ import annotations
 
@@ -16,41 +22,107 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import dot as dot_mod
 from repro.core.pir import decode, encode_pir
 from repro.core.types import PositConfig
 
+from ._compat import CompilerParams as _CompilerParams
+
 DEFAULT_ROWS = 128
+DEFAULT_BLOCK_K = dot_mod.MAX_DOT_LENGTH
 
 
-def _vpdot_kernel(a_ref, b_ref, o_ref, *, cfg: PositConfig):
+def _read_state(acc_ref, mexp_ref, sticky_ref, nar_ref):
+    return dot_mod.QuireState(acc=acc_ref[...],
+                              m_exp=mexp_ref[...][:, 0],
+                              sticky=sticky_ref[...][:, 0],
+                              nar=nar_ref[...][:, 0] != 0)
+
+
+def _write_state(st, acc_ref, mexp_ref, sticky_ref, nar_ref):
+    acc_ref[...] = st.acc
+    mexp_ref[...] = st.m_exp[:, None]
+    sticky_ref[...] = st.sticky[:, None]
+    nar_ref[...] = st.nar.astype(jnp.uint32)[:, None]
+
+
+def _vpdot_kernel(a_ref, b_ref, o_ref, acc_ref, mexp_ref, sticky_ref,
+                  nar_ref, *, cfg: PositConfig, nk: int):
+    k = pl.program_id(1)
     a = decode(a_ref[...].astype(jnp.uint32), cfg)
     b = decode(b_ref[...].astype(jnp.uint32), cfg)
-    pir, sticky = dot_mod.vpdot(a, b, cfg, axis=-1)
-    out = encode_pir(pir, cfg, sticky).astype(o_ref.dtype)
-    o_ref[...] = out[:, None]
+    tile = dot_mod.quire_partial(a, b, axis=-1)
+
+    @pl.when(k == 0)
+    def _init():
+        _write_state(tile, acc_ref, mexp_ref, sticky_ref, nar_ref)
+
+    @pl.when(k > 0)
+    def _accumulate():
+        carried = _read_state(acc_ref, mexp_ref, sticky_ref, nar_ref)
+        merged = dot_mod.quire_combine(carried, tile)
+        _write_state(merged, acc_ref, mexp_ref, sticky_ref, nar_ref)
+
+    @pl.when(k == nk - 1)
+    def _finalize():
+        state = _read_state(acc_ref, mexp_ref, sticky_ref, nar_ref)
+        pir, sticky = dot_mod.quire_finalize(state)
+        out = encode_pir(pir, cfg, sticky).astype(o_ref.dtype)
+        o_ref[...] = out[:, None]
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("cfg", "block_rows", "interpret"))
+                   static_argnames=("cfg", "block_rows", "block_k",
+                                    "interpret"))
 def vpdot_rows(a_patterns, b_patterns, cfg: PositConfig,
-               block_rows: int = DEFAULT_ROWS, interpret=True):
-    """Row-wise posit dot product: (R, L) x (R, L) -> (R,) patterns."""
+               block_rows: int = DEFAULT_ROWS, block_k: int | None = None,
+               interpret=True):
+    """Row-wise posit dot product: (R, L) x (R, L) -> (R,) patterns.
+
+    L is unbounded: the reduction runs as a sequential K grid dimension
+    of ``block_k`` (default MAX_DOT_LENGTH) tiles whose quire states
+    accumulate in VMEM scratch.  L <= block_k is a single tile — the
+    exact monolithic §IV-E pipeline.
+    """
     r, length = a_patterns.shape
-    assert a_patterns.shape == b_patterns.shape
-    assert length <= dot_mod.MAX_DOT_LENGTH
+    if a_patterns.shape != b_patterns.shape:
+        raise ValueError(
+            f"vpdot_rows operand shapes differ: {a_patterns.shape} vs "
+            f"{b_patterns.shape}")
+    if r == 0 or length == 0:
+        # empty quire -> posit zero (pattern 0); nothing to launch
+        return jnp.zeros((r,), cfg.storage_dtype)
+    bk = min(block_k or DEFAULT_BLOCK_K, length)
+    if bk > dot_mod.MAX_DOT_LENGTH:
+        raise ValueError(
+            f"vpdot_rows block_k {bk} exceeds MAX_DOT_LENGTH="
+            f"{dot_mod.MAX_DOT_LENGTH} (uint32 half-limb column-sum bound)")
+    pad = (-length) % bk
+    if pad:  # zero patterns decode to posit zero: excluded from the quire
+        a_patterns = jnp.pad(a_patterns, ((0, 0), (0, pad)))
+        b_patterns = jnp.pad(b_patterns, ((0, 0), (0, pad)))
+    nk = (length + pad) // bk
     bm = min(block_rows, r)
-    grid = (pl.cdiv(r, bm),)
+    grid = (pl.cdiv(r, bm), nk)
     out = pl.pallas_call(
-        functools.partial(_vpdot_kernel, cfg=cfg),
+        functools.partial(_vpdot_kernel, cfg=cfg, nk=nk),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, length), lambda i: (i, 0)),
-            pl.BlockSpec((bm, length), lambda i: (i, 0)),
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
         ],
-        out_specs=pl.BlockSpec((bm, 1), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, 1), cfg.storage_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, dot_mod._NLIMB), jnp.uint32),   # quire limbs
+            pltpu.VMEM((bm, 1), jnp.int32),                 # m_exp
+            pltpu.VMEM((bm, 1), jnp.uint32),                # sticky
+            pltpu.VMEM((bm, 1), jnp.uint32),                # NaR flag
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a_patterns, b_patterns)
     return out[:, 0]

@@ -17,16 +17,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.convert import posit_to_f32
 from repro.core.types import PositConfig
 
-DEFAULT_BLOCKS = (256, 256, 256)  # bm, bk, bn
+from ._compat import CompilerParams as _CompilerParams
 
-# jax renamed TPUCompilerParams -> CompilerParams (0.4.x -> 0.5+)
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
-    pltpu.TPUCompilerParams
+DEFAULT_BLOCKS = (256, 256, 256)  # bm, bk, bn
 
 
 def _gemm_kernel(a_ref, w_ref, o_ref, *, cfg: PositConfig):

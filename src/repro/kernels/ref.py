@@ -26,7 +26,24 @@ def posit_gemm_ref(a, w_patterns, cfg: PositConfig):
 
 
 def vpdot_rows_ref(a_patterns, b_patterns, cfg: PositConfig):
+    """Any length: core.vpdot streams MAX_DOT_LENGTH chunks through
+    quire_partial/quire_combine, matching the kernel's K tiling."""
     return vpdot(a_patterns, b_patterns, cfg, axis=-1)
+
+
+def vpdot_quire_ref(a_patterns, b_patterns, cfg: PositConfig):
+    """The exact 512-bit standard-quire reference (order-independent)."""
+    return vpdot(a_patterns, b_patterns, cfg, axis=-1, mode="quire")
+
+
+def pgemm_ref(a_patterns, w_patterns, cfg: PositConfig):
+    """Per-output-element quire dot: out[i, j] = vpdot(a[i, :], w[:, j]).
+
+    Materializes the (M, K, N) product lattice — keep shapes small.
+    """
+    a = jnp.asarray(a_patterns)
+    w = jnp.asarray(w_patterns)
+    return vpdot(a[:, :, None], w[None, :, :], cfg, axis=1)
 
 
 def elementwise_ref(a_patterns, b_patterns, cfg: PositConfig, op: str,

@@ -63,6 +63,8 @@ class ModelConfig:
     weight_posit: Optional[str] = None    # None | 'posit16' | 'posit8'
     kv_posit: Optional[str] = None
     grad_compress: Optional[str] = None   # cross-pod gradient posit
+    posit_exact_linear: bool = False      # dense() via quire-exact pgemm
+                                          # (numerics audits; slow)
 
     # --- distribution / memory policy ---
     compute_dtype: str = "float32"        # activations: float32 | bfloat16

@@ -45,11 +45,39 @@ def maybe_dequant(w, cfg: ModelConfig):
 
 
 def dense(p, x, cfg: ModelConfig):
+    if cfg.posit_exact_linear:
+        return dense_posit_exact(p, x, cfg)
     w = maybe_dequant(p["w"], cfg).astype(x.dtype)
     y = x @ w
     if "b" in p:
         y = y + p["b"].astype(x.dtype)
     return y
+
+
+def dense_posit_exact(p, x, cfg: ModelConfig, interpret: bool = True):
+    """Bit-exact posit linear for numerics audits (cfg.posit_exact_linear).
+
+    Runs the paper's §IV-E datapath end to end in the posit domain:
+    activations quantize once, ``kernels.ops.pgemm`` reduces every output
+    element through the streaming quire (one rounding each), the bias
+    adds with the fused single-rounding ``vadd``, and the result
+    dequantizes once.  Exactly three roundings per output regardless of
+    K — the float path rounds per f32 op — so this is the ground truth
+    the throughput ``dense`` is audited against.  Orders of magnitude
+    slower; never use it on a serving path.
+    """
+    from repro.kernels import ops as kops   # keep pallas out of model import
+    pc = pcfg(cfg.weight_posit or "posit16")
+    w = p["w"]
+    wq = (w if jnp.issubdtype(w.dtype, jnp.unsignedinteger)
+          else kops.quantize(w.astype(jnp.float32), pc, interpret=interpret))
+    xq = kops.quantize(x.astype(jnp.float32), pc, interpret=interpret)
+    yq = kops.pgemm(xq, wq, pc, interpret=interpret)
+    if "b" in p:
+        bq = kops.quantize(p["b"].astype(jnp.float32), pc,
+                           interpret=interpret)
+        yq = kops.vadd(yq, bq, pc, interpret=interpret)
+    return posit_to_f32(yq, pc).astype(x.dtype)
 
 
 def init_dense(key, d_in, d_out, bias=False, scale=None):

@@ -175,3 +175,29 @@ def test_cache_scale_and_merge_posit_domain():
 
     with pytest.raises(ValueError, match="metadata"):
         kv.merge_caches(cache, mk(k, v, 10), "posit16")
+
+
+def test_merge_caches_under_jit():
+    """merge_caches used to crash with TracerBoolConversionError under
+    jax.jit (the metadata guard called bool() on tracers); the guard is
+    now trace-safe: jitted merge == eager merge, and static shape/dtype
+    metadata mismatches still raise at trace time."""
+    import jax
+    rng = np.random.default_rng(29)
+    mk = lambda kk, vv, ln: {
+        "k": jnp.asarray(kk).astype(POSIT16.storage_dtype),
+        "v": jnp.asarray(vv).astype(POSIT16.storage_dtype),
+        "length": jnp.asarray(ln, jnp.int32)}
+    a = mk(_rand_wire(rng, (2, 8)), _rand_wire(rng, (2, 8)), 8)
+    b = mk(_rand_wire(rng, (2, 8)), _rand_wire(rng, (2, 8)), 8)
+
+    eager = kv.merge_caches(a, b, "posit16", weight_a=0.25)
+    jitted = jax.jit(
+        lambda x, y: kv.merge_caches(x, y, "posit16", weight_a=0.25))(a, b)
+    for leaf in ("k", "v", "length"):
+        assert (np.asarray(eager[leaf]) == np.asarray(jitted[leaf])).all()
+
+    bad = mk(_rand_wire(rng, (2, 8)), _rand_wire(rng, (2, 8)),
+             np.asarray([8, 9]))               # shape-mismatched metadata
+    with pytest.raises(ValueError, match="metadata"):
+        jax.jit(lambda x, y: kv.merge_caches(x, y, "posit16"))(a, bad)

@@ -230,3 +230,189 @@ def test_vpdot_kernel_bit_exact(cfg, rl):
     got = np.asarray(ops.dot_rows(ja, jb, cfg))
     want = np.asarray(ref.vpdot_rows_ref(ja, jb, cfg))
     assert (got == want).all()
+
+
+def _rand_rows(cfg, shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2 ** cfg.nbits, size=shape,
+                        dtype=np.uint64).astype(np.uint32)
+
+
+def _pat(cfg, a):
+    return jnp.asarray(a).astype(cfg.storage_dtype)
+
+
+def test_dot_rows_rank1_regression():
+    """ops.dot_rows used to crash on rank-1 inputs (`ValueError: not
+    enough values to unpack`); it must behave like every other ops
+    wrapper: a vector dot returns a scalar pattern."""
+    cfg = POSIT16
+    a = _rand_rows(cfg, (96,), 11)
+    b = _rand_rows(cfg, (96,), 12)
+    got = ops.dot_rows(_pat(cfg, a), _pat(cfg, b), cfg)
+    assert got.shape == ()
+    want = np.asarray(ref.vpdot_rows_ref(_pat(cfg, a[None]),
+                                         _pat(cfg, b[None]), cfg))[0]
+    assert np.asarray(got) == want
+
+
+def test_dot_rows_batched_and_broadcast():
+    """Leading batch dims flatten/restore; operands broadcast like jnp
+    (a single vector against a batched stack)."""
+    cfg = POSIT16
+    a = _rand_rows(cfg, (2, 3, 40), 13)
+    b = _rand_rows(cfg, (2, 3, 40), 14)
+    got = np.asarray(ops.dot(_pat(cfg, a), _pat(cfg, b), cfg))
+    assert got.shape == (2, 3)
+    want = np.asarray(ref.vpdot_rows_ref(
+        _pat(cfg, a.reshape(6, 40)), _pat(cfg, b.reshape(6, 40)),
+        cfg)).reshape(2, 3)
+    assert (got == want).all()
+    vec = b[0, 0]
+    got_b = np.asarray(ops.dot(_pat(cfg, a), _pat(cfg, vec), cfg))
+    want_b = np.asarray(ref.vpdot_rows_ref(
+        _pat(cfg, a.reshape(6, 40)),
+        _pat(cfg, np.broadcast_to(vec, (6, 40))), cfg)).reshape(2, 3)
+    assert (got_b == want_b).all()
+
+
+def test_dot_rows_beyond_old_cap_matches_quire():
+    """Reductions past the old MAX_DOT_LENGTH=4096 cap (which died with a
+    bare AssertionError) now stream through K tiles — and on
+    bounded-spread data the result equals the exact 512-bit standard
+    quire bit for bit."""
+    cfg = POSIT16
+    rng = np.random.default_rng(15)
+    length = 8192
+    x = (rng.uniform(1.0, 2.0, (3, length)) *
+         rng.choice([-1.0, 1.0], (3, length))).astype(np.float32)
+    y = (rng.uniform(1.0, 2.0, (3, length)) *
+         rng.choice([-1.0, 1.0], (3, length))).astype(np.float32)
+    from repro.core import f32_to_posit
+    ja = f32_to_posit(jnp.asarray(x), cfg)
+    jb = f32_to_posit(jnp.asarray(y), cfg)
+    got = np.asarray(ops.dot_rows(ja, jb, cfg))
+    assert (got == np.asarray(ref.vpdot_rows_ref(ja, jb, cfg))).all()
+    assert (got == np.asarray(ref.vpdot_quire_ref(ja, jb, cfg))).all()
+
+
+def test_dot_rows_long_random_patterns_match_streaming_ref():
+    """Arbitrary random patterns (full exponent range, NaR excluded) at a
+    non-multiple length: tiled kernel == the chunked core reference."""
+    cfg = POSIT32
+    a = _rand_rows(cfg, (2, 5000), 16)
+    b = _rand_rows(cfg, (2, 5000), 17)
+    got = np.asarray(ops.dot_rows(_pat(cfg, a), _pat(cfg, b), cfg))
+    want = np.asarray(ref.vpdot_rows_ref(_pat(cfg, a), _pat(cfg, b), cfg))
+    assert (got == want).all()
+
+
+def test_dot_rows_edge_cases_across_tiles():
+    """Zero rows, and NaR appearing only in a *later* K tile, survive the
+    cross-tile quire state (forced multi-tile via block_k=64)."""
+    from repro.kernels import posit_dot
+    cfg = POSIT16
+    length = 200                      # 4 tiles of 64 (padded)
+    a = np.zeros((3, length), np.uint32)
+    b = np.zeros((3, length), np.uint32)
+    one = np.uint32(golden.from_float(1.0, cfg))
+    a[1, :], b[1, :] = one, one                        # sum of 200 ones
+    a[2, :], b[2, :] = one, one
+    a[2, 150] = np.uint32(cfg.nar_pattern)             # NaR in tile 2
+    got = np.asarray(posit_dot.vpdot_rows(
+        jnp.asarray(a).astype(cfg.storage_dtype),
+        jnp.asarray(b).astype(cfg.storage_dtype), cfg,
+        block_k=64)).astype(np.uint32)
+    assert got[0] == 0                                 # empty quire -> 0
+    assert got[1] == golden.from_float(200.0, cfg)
+    assert got[2] == cfg.nar_pattern                   # NaR propagates
+
+
+def test_dot_and_pgemm_zero_size_dims():
+    """Empty contractions/batches: an empty quire is posit zero, empty
+    batch dims produce empty outputs — no kernel launch, no crash."""
+    cfg = POSIT16
+    z = lambda *s: jnp.zeros(s, cfg.storage_dtype)
+    got = np.asarray(ops.dot(z(3, 0), z(3, 0), cfg))
+    assert got.shape == (3,) and (got == 0).all()
+    assert ops.dot(z(0, 7), z(0, 7), cfg).shape == (0,)
+    got = np.asarray(ops.pgemm(z(2, 0), z(0, 4), cfg))
+    assert got.shape == (2, 4) and (got == 0).all()
+    assert ops.pgemm(z(0, 5), z(5, 4), cfg).shape == (0, 4)
+    assert ops.pgemm(z(2, 5), z(5, 0), cfg).shape == (2, 0)
+
+
+def test_quire_tile_cap_is_value_error():
+    """The per-tile bound surfaces as a ValueError naming the length and
+    the cap — not a bare AssertionError (and the public paths never hit
+    it: they tile)."""
+    from repro.core import dot as dot_mod
+    from repro.core.pir import decode
+    cfg = POSIT16
+    a = decode(jnp.zeros((1, dot_mod.MAX_DOT_LENGTH + 1), jnp.uint32), cfg)
+    with pytest.raises(ValueError, match="4097.*4096"):
+        dot_mod.quire_partial(a, a)
+    with pytest.raises(ValueError, match="MAX_DOT_LENGTH"):
+        from repro.kernels import posit_dot
+        posit_dot.vpdot_rows(jnp.zeros((1, 8192), POSIT16.storage_dtype),
+                             jnp.zeros((1, 8192), POSIT16.storage_dtype),
+                             POSIT16, block_k=8192)
+
+
+# ---------------------------------------------------------------------------
+# pgemm: posit-in -> posit-out quire matmul (posit_qgemm)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [POSIT8, POSIT16,
+                                 pytest.param(POSIT32, marks=_slow)],
+                         ids=lambda c: c.name)
+@pytest.mark.parametrize("mkn", [(5, 37, 7), (16, 64, 16),
+                                 pytest.param((33, 129, 19), marks=_slow)])
+def test_pgemm_matches_ref(cfg, mkn):
+    m, k, n = mkn
+    a = _rand_rows(cfg, (m, k), hash((cfg.nbits, mkn)) % 2 ** 31)
+    w = _rand_rows(cfg, (k, n), hash((mkn, cfg.nbits)) % 2 ** 31)
+    got = np.asarray(ops.pgemm(_pat(cfg, a), _pat(cfg, w), cfg))
+    want = np.asarray(ref.pgemm_ref(_pat(cfg, a), _pat(cfg, w), cfg))
+    assert got.dtype == want.dtype
+    assert (got == want).all()
+
+
+def test_pgemm_bit_identical_to_per_row_dot():
+    """Acceptance criterion: pgemm(a, w)[i, j] == dot_rows(a[i], w[:, j])
+    bit for bit on matching shapes."""
+    cfg = POSIT16
+    m, k, n = 6, 50, 4
+    a = _rand_rows(cfg, (m, k), 18)
+    w = _rand_rows(cfg, (k, n), 19)
+    got = np.asarray(ops.pgemm(_pat(cfg, a), _pat(cfg, w), cfg))
+    per_row = np.asarray(ops.dot(
+        _pat(cfg, a[:, None, :]),
+        _pat(cfg, np.moveaxis(w, 0, 1)[None, :, :]), cfg))
+    assert (got == per_row).all()
+
+
+@_slow
+def test_pgemm_long_k_streams_tiles():
+    """K > MAX_DOT_LENGTH streams multiple quire tiles (with ragged
+    padding) and still matches the chunked reference."""
+    cfg = POSIT16
+    m, k, n = 2, 8200, 3
+    a = _rand_rows(cfg, (m, k), 20)
+    w = _rand_rows(cfg, (k, n), 21)
+    got = np.asarray(ops.pgemm(_pat(cfg, a), _pat(cfg, w), cfg))
+    want = np.asarray(ref.pgemm_ref(_pat(cfg, a), _pat(cfg, w), cfg))
+    assert (got == want).all()
+
+
+def test_pgemm_rank_polymorphic():
+    cfg = POSIT8
+    a = _rand_rows(cfg, (2, 3, 24), 22)
+    w = _rand_rows(cfg, (24, 5), 23)
+    got = np.asarray(ops.pgemm(_pat(cfg, a), _pat(cfg, w), cfg))
+    assert got.shape == (2, 3, 5)
+    flat = np.asarray(ops.pgemm(_pat(cfg, a.reshape(6, 24)),
+                                _pat(cfg, w), cfg))
+    assert (got.reshape(6, 5) == flat).all()
+    vec = np.asarray(ops.pgemm(_pat(cfg, a[0, 0]), _pat(cfg, w), cfg))
+    assert vec.shape == (5,) and (vec == got[0, 0]).all()

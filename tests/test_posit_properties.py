@@ -171,3 +171,66 @@ def test_encoding_monotone(vals):
     decoded = np.asarray([ref.to_float(int(p), cfg) for p in pats])
     order_p = np.argsort(signed, kind="stable")
     assert (np.diff(decoded[order_p]) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Streaming-quire dot product: tiled == monolithic == exact quire
+# ---------------------------------------------------------------------------
+
+def _dot_cfg(nbits):
+    from repro.core.types import POSIT8
+    return {8: POSIT8, 16: POSIT16, 32: POSIT32}[nbits]
+
+
+@pytest.mark.slow       # interpret-mode 4k-length kernel sweeps
+@settings(max_examples=9, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       nbits=st.sampled_from([8, 16, 32]),
+       length=st.sampled_from([4095, 4096, 4097]))
+def test_tiled_dot_bit_identical_across_old_cap(seed, nbits, length):
+    """Property (the tentpole's acceptance): for lengths straddling the
+    old MAX_DOT_LENGTH=4096 boundary, the K-tiled kernel (forced
+    multi-tile via block_k=1024) is bit-identical to the monolithic
+    kernel (single tile, lengths <= 4096), to the streaming core
+    reference, and — on bounded-spread data, where the 128-bit window is
+    exact — to the 512-bit standard quire."""
+    from repro.core import f32_to_posit
+    from repro.kernels import posit_dot
+    cfg = _dot_cfg(nbits)
+    rng = np.random.default_rng(seed)
+    x = (rng.uniform(1.0, 2.0, (2, length)) *
+         rng.choice([-1.0, 1.0], (2, length))).astype(np.float32)
+    y = (rng.uniform(1.0, 2.0, (2, length)) *
+         rng.choice([-1.0, 1.0], (2, length))).astype(np.float32)
+    ja = f32_to_posit(jnp.asarray(x), cfg)
+    jb = f32_to_posit(jnp.asarray(y), cfg)
+
+    tiled = _np(posit_dot.vpdot_rows(ja, jb, cfg, block_k=1024))
+    core_ref = _np(kref.vpdot_rows_ref(ja, jb, cfg))
+    quire = _np(kref.vpdot_quire_ref(ja, jb, cfg))
+    assert (tiled == core_ref).all(), (nbits, length)
+    assert (tiled == quire).all(), (nbits, length)
+    if length <= 4096:                  # the original monolithic kernel
+        mono = _np(posit_dot.vpdot_rows(ja, jb, cfg, block_k=length))
+        assert (tiled == mono).all(), (nbits, length)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       nbits=st.sampled_from([8, 16, 32]))
+def test_tiled_dot_matches_monolithic_random_patterns(seed, nbits):
+    """Fast-lane variant: arbitrary random patterns (full exponent range,
+    NaR included), short rows — forced K tiling must match the
+    single-tile monolithic kernel bit for bit."""
+    from repro.kernels import posit_dot
+    cfg = _dot_cfg(nbits)
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2 ** cfg.nbits, (3, 192),
+                     dtype=np.uint64).astype(np.uint32)
+    b = rng.integers(0, 2 ** cfg.nbits, (3, 192),
+                     dtype=np.uint64).astype(np.uint32)
+    ja = jnp.asarray(a).astype(cfg.storage_dtype)
+    jb = jnp.asarray(b).astype(cfg.storage_dtype)
+    mono = _np(posit_dot.vpdot_rows(ja, jb, cfg))           # single tile
+    core_ref = _np(kref.vpdot_rows_ref(ja, jb, cfg))
+    assert (mono == core_ref).all(), (nbits, seed)

@@ -54,6 +54,24 @@ def test_quire_posit16():
     assert (got == want).all()
 
 
+def test_quire_streams_beyond_tile_cap():
+    """mode='quire' reductions longer than MAX_DOT_LENGTH stream tiles
+    through exact 512-bit adds; a sum engineered to cancel down to a
+    tiny cross-tile residual comes out exact."""
+    n = 8192
+    vals = np.zeros((1, n), np.float32)
+    vals[0, 0] = 2.0 ** 40          # big term in tile 0 ...
+    vals[0, -1] = -(2.0 ** 40)      # ... cancelled from tile 1
+    vals[0, 1] = 2.0 ** -40         # leaves exactly 2^-80 after squaring
+    a = f32_to_posit(jnp.asarray(vals), POSIT32)
+    ones = f32_to_posit(jnp.asarray(np.where(vals < 0, -vals, vals)
+                                    .astype(np.float32)), POSIT32)
+    # a . ones = 2^80 - 2^80 + 2^-80
+    got = int(np.asarray(vpdot(a, ones, POSIT32, mode="quire"))[0])
+    want = ref.from_float(float(2.0 ** -80), POSIT32)
+    assert got == want
+
+
 def test_quire_zero_and_nar():
     cfg = POSIT32
     one = np.uint32(ref.from_float(1.0, cfg))
