@@ -1,0 +1,92 @@
+"""Serving engine throughput: prefill + scan-decode tok/s by KV format.
+
+For each KV-cache storage format (f32 ``none``, ``posit16``, ``posit8``)
+on a reduced transformer config, times the engine's jitted prefill and
+its single-``lax.scan`` decode, and compares the scan against the
+per-step jitted Python loop (dispatch overhead) once for the f32 cache.
+
+Emits ``name,us_per_call,derived`` rows (harness contract); ``derived``
+carries decode tok/s, the cache compression ratio, and the
+scan-vs-stepwise token agreement (expected 1.0 — the regression guard
+that one-jit decode matches the reference loop).
+
+``--smoke`` shrinks the sweep for the CI fast lane (exercises prefill
+headroom, ring-free dense decode, and both posit codecs end to end).
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+
+import numpy as np
+
+import jax
+
+from repro import configs
+from repro.compress.kvcache import cache_report
+from repro.models import get_family
+from repro.runtime.engine import Engine
+
+ARCH = "phi3-medium-14b"
+KV_FORMATS = (None, "posit16", "posit8")
+REPEATS = 3
+
+
+def _time(fn):
+    jax.block_until_ready(fn())           # compile + warm cache
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(REPEATS):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / REPEATS * 1e6
+
+
+def run(smoke: bool = False):
+    batch, prompt_len, gen = (2, 16, 8) if smoke else (4, 32, 32)
+    base = configs.get_config(ARCH).reduced(compute_dtype="float32")
+    rng = np.random.default_rng(7)
+    params = get_family(base).init_params(jax.random.PRNGKey(0), base)
+    prompts = rng.integers(1, base.vocab, size=(batch, prompt_len))
+
+    rows = []
+    stepwise_tokens = None
+    for kv in KV_FORMATS:
+        cfg = dataclasses.replace(base, kv_posit=kv)
+        eng = Engine(cfg, params, max_len=prompt_len + gen, seed=0)
+
+        us_prefill = _time(lambda: eng.prefill(prompts)[1])
+        cache, _, _ = eng.prefill(prompts)
+        rep = cache_report(cache)
+        rows.append((f"serve_prefill_kv={kv or 'none'}_b{batch}"
+                     f"_s{prompt_len}", us_prefill,
+                     f"cache_bytes={rep['bytes']} "
+                     f"ratio={rep['ratio']:.2f}x"))
+
+        us_gen = _time(lambda: eng.generate(prompts, gen).tokens)
+        tok_s = gen * batch / (us_gen / 1e6)
+        derived = f"tok_s={tok_s:.1f} gen={gen}"
+        if kv is None:
+            # dispatch-overhead reference: per-step jitted Python loop
+            us_step = _time(
+                lambda: eng.generate_stepwise(prompts, gen).tokens)
+            agree = float((eng.generate(prompts, gen).tokens ==
+                           eng.generate_stepwise(prompts, gen).tokens)
+                          .mean())
+            stepwise_tokens = agree
+            derived += (f" stepwise_us={us_step:.1f} "
+                        f"scan_speedup={us_step / max(us_gen, 1e-9):.2f}x "
+                        f"scan_vs_step_match={agree:.4f}")
+        rows.append((f"serve_decode_kv={kv or 'none'}_b{batch}"
+                     f"_g{gen}", us_gen, derived))
+    assert stepwise_tokens == 1.0, \
+        "scan decode diverged from the per-step reference loop"
+    return rows
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv[1:]
+    print("name,us_per_call,derived")
+    for row in run(smoke=smoke):
+        print(",".join(str(x) for x in row))

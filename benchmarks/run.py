@@ -12,7 +12,7 @@ import sys
 def main() -> None:
     from benchmarks import (bench_accuracy, bench_compression, bench_cost,
                             bench_dnn_accuracy, bench_dot, bench_elementwise,
-                            roofline)
+                            bench_serve, roofline)
     suites = {
         "accuracy": bench_accuracy.run,        # paper §VI table
         "dnn": bench_dnn_accuracy.run,         # paper Figs 5/6
@@ -20,6 +20,7 @@ def main() -> None:
         "compression": bench_compression.run,  # beyond-paper systems wins
         "elementwise": bench_elementwise.run,  # fused PVU ops vs round-trip
         "dot": bench_dot.run,                  # §IV-E tiled quire sweep
+        "serve": bench_serve.run,              # engine prefill/decode tok/s
         "roofline": roofline.run,              # §Roofline summary
     }
     wanted = sys.argv[1:] or list(suites)

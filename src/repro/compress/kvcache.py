@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.convert import f32_to_posit, posit_to_f32
+from repro.core.tracing import is_tracer as _is_tracer
 from repro.kernels import ops as kops
 from .gradient import pcfg_of, scalar_pattern
 
@@ -47,6 +48,27 @@ def cache_bytes(cache) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 
 
+def cache_report(cache) -> dict:
+    """Actual vs f32-equivalent bytes and the compression ratio.
+
+    Posit-pattern leaves (unsigned ints) and reduced-precision float
+    leaves count 4 bytes/element in the f32 baseline; integer metadata
+    (``len``/``lens``/``max_len``) counts as-is.  Shape-agnostic, so it
+    reports ring-buffer (window-sized) caches the same way as linear
+    ones — the ratio compares storage *dtypes*, not layouts.
+    """
+    leaves = jax.tree.leaves(cache)
+    actual = sum(x.size * x.dtype.itemsize for x in leaves)
+    f32 = sum(
+        x.size * 4
+        if (jnp.issubdtype(x.dtype, jnp.unsignedinteger)
+            or jnp.issubdtype(x.dtype, jnp.floating))
+        else x.size * x.dtype.itemsize
+        for x in leaves)
+    return {"bytes": actual, "f32_bytes": f32,
+            "ratio": f32 / max(actual, 1)}
+
+
 # ---------------------------------------------------------------------------
 # Posit-domain cache maintenance (fused elementwise kernels)
 # ---------------------------------------------------------------------------
@@ -69,14 +91,6 @@ def scale_cache(cache, factor: float, name: str, interpret: bool = True):
         return x
 
     return jax.tree.map(one, cache)
-
-
-def _is_tracer(x) -> bool:
-    try:
-        from jax.core import Tracer
-    except ImportError:                      # pragma: no cover - old jax
-        from jax._src.core import Tracer
-    return isinstance(x, Tracer)
 
 
 def merge_caches(cache_a, cache_b, name: str, weight_a: float = 0.5,

@@ -1,0 +1,14 @@
+"""JAX tracing introspection shared across layers (single home for the
+``Tracer`` import shim — jax has moved the class between versions)."""
+from __future__ import annotations
+
+try:
+    from jax.core import Tracer as _Tracer
+except ImportError:                          # pragma: no cover - old jax
+    from jax._src.core import Tracer as _Tracer
+
+
+def is_tracer(x) -> bool:
+    """True when ``x`` is an abstract traced value (inside jit/scan/...)
+    rather than a concrete array — host-side guards cannot inspect it."""
+    return isinstance(x, _Tracer)

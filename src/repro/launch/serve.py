@@ -1,11 +1,15 @@
-"""Serving launcher: batched prefill + decode with posit KV cache.
+"""Serving launcher: the preallocated ring-buffer posit-cache engine.
 
-Loads (or random-inits) a model, prefills a batch of prompts, then decodes
-greedily.  ``--kv-posit`` turns on the paper's KV compression; the report
-prints cache bytes with and without it.
+Loads (or random-inits) a model, builds a ``repro.runtime.engine.Engine``
+with a ``--max-len`` cache budget, prefills a batch of prompts (ragged
+lengths supported for the transformer family via ``--ragged``), then
+decodes the whole generation in one compiled ``lax.scan`` call.
+``--kv-posit`` turns on the paper's KV compression; the report prints
+actual vs f32-equivalent cache bytes.
 
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
-      --reduced --batch 4 --prompt-len 32 --gen 16 --kv-posit posit16
+      --reduced --batch 4 --prompt-len 32 --gen 16 --kv-posit posit16 \
+      --max-len 64 --temperature 0.7 --seed 0
 """
 from __future__ import annotations
 
@@ -19,8 +23,9 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.compress.kvcache import cache_bytes
+from repro.compress.kvcache import cache_report
 from repro.models import get_family
+from repro.runtime.engine import Engine
 
 
 def main(argv=None):
@@ -30,9 +35,18 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt lengths across the batch "
+                         "(transformer family only)")
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="preallocated cache length "
+                         "(default: prompt-len + gen)")
     ap.add_argument("--kv-posit", choices=["posit16", "posit8", "none"],
                     default="none")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 = softmax sampling")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch)
@@ -42,11 +56,18 @@ def main(argv=None):
         cfg = dataclasses.replace(cfg, kv_posit=args.kv_posit)
 
     fam = get_family(cfg)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     params = fam.init_params(jax.random.PRNGKey(0), cfg)
-    tokens = jnp.asarray(
-        rng.integers(1, cfg.vocab, size=(args.batch, args.prompt_len)),
-        jnp.int32)
+
+    if args.ragged:
+        lens = rng.integers(max(2, args.prompt_len // 2),
+                            args.prompt_len + 1, size=args.batch)
+        prompts = [rng.integers(1, cfg.vocab, int(n)).tolist()
+                   for n in lens]
+    else:
+        prompts = rng.integers(1, cfg.vocab,
+                               size=(args.batch, args.prompt_len))
+
     kwargs = {}
     if cfg.family == "whisper":
         kwargs["frames"] = jnp.asarray(rng.standard_normal(
@@ -55,28 +76,28 @@ def main(argv=None):
         kwargs["visual"] = jnp.asarray(rng.standard_normal(
             (args.batch, cfg.n_visual_tokens, cfg.d_model)), jnp.float32)
 
+    max_len = args.max_len or (args.prompt_len + args.gen)
+    engine = Engine(cfg, params, max_len=max_len,
+                    temperature=args.temperature, seed=args.seed)
+
     t0 = time.time()
-    prefill = jax.jit(lambda p, t: fam.prefill(p, t, cfg, **kwargs))
-    cache, logits = prefill(params, tokens)
+    cache, logits, lens = engine.prefill(prompts, **kwargs)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
-          f"cache bytes = {cache_bytes(cache):,} "
-          f"(kv_posit={cfg.kv_posit})")
+    rep = cache_report(cache)
+    print(f"prefill: {args.batch} prompts (lens {lens.tolist()}) in "
+          f"{t_prefill:.2f}s; cache bytes = {rep['bytes']:,} of "
+          f"{rep['f32_bytes']:,} f32-equiv ({rep['ratio']:.2f}x, "
+          f"kv_posit={cfg.kv_posit}, max_len={max_len})")
 
-    decode = jax.jit(lambda p, c, t: fam.decode_step(p, c, t, cfg))
-    out_tokens = [jnp.argmax(logits, -1).astype(jnp.int32)]
     t0 = time.time()
-    for _ in range(args.gen):
-        logits, cache = decode(params, cache, out_tokens[-1])
-        out_tokens.append(jnp.argmax(logits, -1).astype(jnp.int32))
-    jax.block_until_ready(out_tokens[-1])
+    res = engine.generate(prompts, args.gen, **kwargs)
     dt = time.time() - t0
-    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
     print(f"decode: {args.gen} steps in {dt:.2f}s "
-          f"({args.gen * args.batch / max(dt, 1e-9):.1f} tok/s)")
-    print("generated ids:\n", gen)
-    return gen
+          f"({args.gen * args.batch / max(dt, 1e-9):.1f} tok/s, "
+          f"one compiled scan; includes prefill+compile on first call)")
+    print("generated ids:\n", res.tokens)
+    return res.tokens
 
 
 if __name__ == "__main__":

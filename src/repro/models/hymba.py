@@ -270,6 +270,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
         "v_glb": jnp.zeros((len(cfg.global_layers), *kv_g), dt),
         "ssm": jnp.zeros((cfg.n_layers, batch, hs, p_dim, n), jnp.float32),
         "len": jnp.zeros((), jnp.int32),
+        "lens": jnp.zeros((batch,), jnp.int32),
+        "max_len": jnp.asarray(max_len, jnp.int32),
     }
 
 
@@ -277,6 +279,9 @@ def decode_step(params, cache, token, cfg: ModelConfig):
     from repro.core.convert import f32_to_posit
     pos = cache["len"]
     bsz = token.shape[0]
+    if cfg.global_layers:
+        L.check_cache_capacity(pos, cache["k_glb"].shape[2],
+                               "global-layer KV cache")
     x = params["tok_embed"][token][:, None, :].astype(L.cdtype(cfg))
     is_global = [i in cfg.global_layers for i in range(cfg.n_layers)]
     glb_index = {i: j for j, i in enumerate(cfg.global_layers)}
@@ -306,22 +311,22 @@ def decode_step(params, cache, token, cfg: ModelConfig):
         k = L.apply_rope(k, pos[None, None], cfg.rope_theta)
         if is_global[li]:
             gi = glb_index[li]
-            kc = lax.dynamic_update_slice_in_dim(k_glb[gi], quant(k), pos, 1)
-            vc = lax.dynamic_update_slice_in_dim(v_glb[gi], quant(v), pos, 1)
+            kc = L.guarded_cache_update(k_glb[gi], quant(k), pos, 1)
+            vc = L.guarded_cache_update(v_glb[gi], quant(v), pos, 1)
             k_glb = k_glb.at[gi].set(kc)
             v_glb = v_glb.at[gi].set(vc)
             att = L.decode_attention(q, kc, vc, pos + 1, cfg=cfg,
                                      kv_posit=cfg.kv_posit)
         else:
+            # ring buffer: write at pos % window, rotation-aware masking
             t_swa = k_swa.shape[2]
-            slot = pos % t_swa
+            slot = lax.rem(pos, t_swa)
             kc = lax.dynamic_update_slice_in_dim(k_swa[li], quant(k), slot, 1)
             vc = lax.dynamic_update_slice_in_dim(v_swa[li], quant(v), slot, 1)
             k_swa = k_swa.at[li].set(kc)
             v_swa = v_swa.at[li].set(vc)
-            att = L.decode_attention(
-                q, kc, vc, jnp.minimum(pos + 1, t_swa), cfg=cfg,
-                kv_posit=cfg.kv_posit)
+            att = L.decode_attention(q, kc, vc, pos + 1, cfg=cfg,
+                                     kv_posit=cfg.kv_posit, ring=True)
         att = att.reshape(bsz, 1, cfg.n_heads * cfg.head_dim)
         att = L.rms_norm(lp["attn_norm"], att, cfg)
 
@@ -341,17 +346,24 @@ def decode_step(params, cache, token, cfg: ModelConfig):
 
     h = L.rms_norm(params["final_norm"], h, cfg)
     logits = (h[:, 0, :] @ params["lm_head"]["w"].astype(h.dtype))
-    new_cache = {"k_swa": k_swa, "v_swa": v_swa, "k_glb": k_glb,
-                 "v_glb": v_glb, "ssm": ssm, "len": pos + 1}
+    new_cache = dict(cache, k_swa=k_swa, v_swa=v_swa, k_glb=k_glb,
+                     v_glb=v_glb, ssm=ssm, len=pos + 1)
+    if "lens" in cache:
+        new_cache["lens"] = cache["lens"] + 1
     return logits.astype(jnp.float32), new_cache
 
 
-def prefill(params, tokens, cfg: ModelConfig, visual=None):
+def prefill(params, tokens, cfg: ModelConfig, visual=None, *,
+            max_len=None):
     """Simple prefill: run decode_step over the prompt (hybrid caches have
     heterogeneous layouts; throughput prefill would fuse, serving tests
-    only need correctness)."""
+    only need correctness).  ``max_len`` preallocates decode headroom."""
     bsz, s = tokens.shape
-    cache = init_cache(cfg, bsz, max(s + 1, cfg.sliding_window or s + 1))
+    ml = max(s + 1, cfg.sliding_window or s + 1) if max_len is None \
+        else int(max_len)
+    if ml < s:
+        raise ValueError(f"prefill max_len={ml} < prompt length {s}")
+    cache = init_cache(cfg, bsz, ml)
 
     def step(cache, tok):
         logits, cache = decode_step(params, cache, tok, cfg)

@@ -187,11 +187,14 @@ def _attn_context_parallel(q, k, v, cfg: ModelConfig):
 
 
 def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
-                    window: int = 0, q_offset: int = 0):
+                    window: int = 0, q_offset: int = 0, kv_mask=None):
     """q: (B,S,H,D); k,v: (B,T,G,D[v]) grouped-query; returns (B,S,H,Dv).
 
     Scans KV in blocks with an online-softmax carry; the causal variant
     optionally skips strictly-future blocks with lax.cond.
+
+    ``kv_mask``: optional (B, T) bool — False keys are excluded for that
+    batch row (left-padded ragged prompts in the serving engine).
     """
     q, k, v = _attn_context_parallel(q, k, v, cfg)
     b, s_len, h, d = q.shape
@@ -207,6 +210,8 @@ def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
           * scale)                                          # (nq,B,G,R,qc,D)
     kg = k.reshape(b, n_k, kc, g, d).transpose(1, 0, 3, 2, 4)
     vg = v.reshape(b, n_k, kc, g, dv).transpose(1, 0, 3, 2, 4)
+    km = (kv_mask.reshape(b, n_k, kc).transpose(1, 0, 2)
+          if kv_mask is not None else None)                 # (nk,B,kc)
 
     q_pos = q_offset + jnp.arange(s_len).reshape(n_q, qc)
     k_pos = jnp.arange(t_len).reshape(n_k, kc)
@@ -228,6 +233,9 @@ def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
                     bias = bias + jnp.where(
                         qp[:, None] - kp[None, :] < window, 0.0, _NEG)
                 sblk = _attn_block(qblk, kblk, vblk, bias)  # (B,G,R,qc,kc)
+                if km is not None:
+                    sblk = jnp.where(
+                        km[ki][:, None, None, None, :], sblk, _NEG)
                 m_new = jnp.maximum(m, sblk.max(-1))
                 p = jnp.exp(sblk - m_new[..., None])
                 alpha = jnp.exp(m - m_new)
@@ -260,7 +268,8 @@ def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, cfg: ModelConfig,
-                     kv_posit: Optional[str] = None, window: int = 0):
+                     kv_posit: Optional[str] = None, window: int = 0,
+                     start=None, ring: bool = False):
     """Single-token decode: q (B,1,H,D); caches (B,T,G,D) possibly posit
     patterns; positions >= cache_len are masked.
 
@@ -272,6 +281,16 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, cfg: ModelConfig,
     contraction is local and the softmax reductions across shards are
     (B,H)-sized scalars.  Decode scores are tiny (B*H*T f32), so no
     chunking is needed for memory.
+
+    Masking is rotation- and batch-aware:
+    * ``cache_len`` — scalar or (B,) — absolute write frontier; a (B,)
+      value gives each batch row its own visible length (ragged batches).
+    * ``start`` — scalar or (B,) — first valid absolute position (the
+      left-padding offset of each row); positions before it are masked.
+    * ``ring=True`` — the cache is a ring buffer of capacity T written at
+      ``pos % T``: slot ``i`` holds absolute position
+      ``p - ((p - i) mod T)`` for frontier ``p = cache_len - 1``, and the
+      validity/window tests run on those rotated absolute positions.
     """
     b, _, h, d = q.shape
     t_len, g = k_cache.shape[1], k_cache.shape[2]
@@ -296,11 +315,22 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, cfg: ModelConfig,
     # decode-vs-prefill agreement; scores stay f32.)
     scores = jnp.einsum("bgrd,btgd->bgrt", qg, ks,
                         preferred_element_type=jnp.float32)  # (B,G,R,T)
-    t_pos = jnp.arange(t_len)
-    valid = t_pos < cache_len
+    t_pos = jnp.arange(t_len, dtype=jnp.int32)
+    cl = jnp.asarray(cache_len, jnp.int32)
+    cl = jnp.broadcast_to(cl, (b,)) if cl.ndim == 0 else cl
+    st = jnp.asarray(0 if start is None else start, jnp.int32)
+    st = jnp.broadcast_to(st, (b,)) if st.ndim == 0 else st
+    if ring:
+        p = (cl - 1)[:, None]                               # write frontier
+        apos = p - lax.rem(p - t_pos[None, :], t_len)       # (B,T) absolute
+    else:
+        apos = jnp.broadcast_to(t_pos[None, :], (b, t_len))
+    valid = (apos < cl[:, None]) & (apos >= st[:, None])
+    if ring:
+        valid &= apos >= 0                                  # unwritten slots
     if window:
-        valid &= t_pos >= (cache_len - window)
-    scores = jnp.where(valid[None, None, None, :], scores, _NEG)
+        valid &= apos >= (cl[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, _NEG)
     m = scores.max(-1, keepdims=True)
     p = jnp.exp(scores - m)
     l = p.sum(-1)
@@ -308,6 +338,54 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, cfg: ModelConfig,
                      preferred_element_type=jnp.float32)
     out = out / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(b, 1, h, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Guarded decode-time cache writes
+# ---------------------------------------------------------------------------
+# ``lax.dynamic_update_slice_in_dim`` CLAMPS out-of-range start indices, so
+# an unguarded decode write past the cache capacity silently overwrites the
+# last slot — the original serving bug.  Every decode-time cache write goes
+# through these two helpers instead: a concrete out-of-capacity index
+# raises, a traced one (inside jit/scan, where the engine has already
+# checked capacity statically) drops the write rather than clamping.
+
+def check_cache_capacity(pos, capacity: int, what: str = "KV cache"):
+    """Raise on a concrete decode position past the cache capacity.
+
+    Traced positions (under jit/scan) cannot raise; there the guarded
+    write below degrades to a dropped write — never a clamp-overwrite —
+    and the serving engine enforces capacity statically up front.
+    """
+    from repro.core.tracing import is_tracer
+    if is_tracer(pos):
+        return
+    if int(pos) >= capacity:
+        raise ValueError(
+            f"decode_step past {what} capacity: position {int(pos)} >= "
+            f"{capacity}. Preallocate headroom with init_cache(..., "
+            "max_len) / prefill(..., max_len=...) or use "
+            "repro.runtime.engine.Engine, which sizes caches up front.")
+
+
+def guarded_cache_update(arr, upd, idx, axis: int):
+    """``dynamic_update_slice_in_dim`` that refuses to clamp: writes at
+    ``idx >= capacity`` leave ``arr`` unchanged instead of silently
+    overwriting the final slot."""
+    new = lax.dynamic_update_slice_in_dim(arr, upd, idx, axis)
+    return jnp.where(idx < arr.shape[axis], new, arr)
+
+
+def pad_cache_time(kv, t: int):
+    """Zero-pad the stacked-layer KV time axis (L,B,S,...) up to ``t`` —
+    how prefill turns exactly-prompt-sized KV into a cache with decode
+    headroom."""
+    s = kv.shape[2]
+    if s == t:
+        return kv
+    pad = [(0, 0)] * kv.ndim
+    pad[2] = (0, t - s)
+    return jnp.pad(kv, pad)
 
 
 # ---------------------------------------------------------------------------

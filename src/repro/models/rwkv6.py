@@ -291,8 +291,14 @@ def decode_step(params, cache, token, cfg: ModelConfig):
     return logits.astype(jnp.float32), new_cache
 
 
-def prefill(params, tokens, cfg: ModelConfig, visual=None):
-    """Prefill = forward pass threading the recurrent state through."""
+def prefill(params, tokens, cfg: ModelConfig, visual=None, *,
+            max_len=None):
+    """Prefill = forward pass threading the recurrent state through.
+
+    ``max_len`` is accepted for protocol uniformity and ignored: the
+    recurrent state is O(1), so there is no cache to preallocate and
+    decode can never run out of capacity."""
+    del max_len
     b, s = tokens.shape
     h, n, _ = _heads(cfg)
     x = params["tok_embed"][tokens].astype(L.cdtype(cfg))

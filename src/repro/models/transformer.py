@@ -9,8 +9,14 @@ Protocol (shared by every family in ``repro.models``):
     init_params(key, cfg)                        -> params pytree
     train_loss(params, batch, cfg)               -> scalar loss
     init_cache(cfg, batch, max_len)              -> cache pytree
-    prefill(params, tokens, cfg, visual=None)    -> (cache, last_logits)
-    decode_step(params, cache, token, pos, cfg)  -> (logits, cache)
+    prefill(params, tokens, cfg, visual=None,
+            max_len=None, ...)                   -> (cache, last_logits)
+    decode_step(params, cache, token, cfg)       -> (logits, cache)
+
+``prefill(max_len=...)`` preallocates decode headroom in the returned
+cache; without it the cache is prompt-sized and decode_step refuses to
+write past it (see the serving section below for the cache layout and
+the ring-buffer sliding-window lane).
 """
 from __future__ import annotations
 
@@ -89,7 +95,7 @@ def init_params(key, cfg: ModelConfig):
 # attention forward (dense + MLA)
 # ---------------------------------------------------------------------------
 
-def _attn_forward(p, x, positions, cfg: ModelConfig):
+def _attn_forward(p, x, positions, cfg: ModelConfig, kv_mask=None):
     b, s, d = x.shape
     if cfg.mla:
         q_lat = L.rms_norm(p["q_norm"], L.dense(p["wdq"], x, cfg), cfg)
@@ -111,7 +117,8 @@ def _attn_forward(p, x, positions, cfg: ModelConfig):
             [k_nope, jnp.broadcast_to(
                 k_rope, (b, s, cfg.n_heads, cfg.qk_rope_dim))], -1)
         q = jnp.concatenate([q_nope, q_rope], -1)
-        out = L.flash_attention(q, k, v, causal=True, cfg=cfg)
+        out = L.flash_attention(q, k, v, causal=True, cfg=cfg,
+                                kv_mask=kv_mask)
         out = out.reshape(b, s, cfg.n_heads * cfg.v_head_dim)
         return L.dense(p["wo"], out, cfg), (c_kv, k_rope[:, :, 0, :])
 
@@ -121,14 +128,14 @@ def _attn_forward(p, x, positions, cfg: ModelConfig):
     q = L.apply_rope(q, positions, cfg.rope_theta)
     k = L.apply_rope(k, positions, cfg.rope_theta)
     out = L.flash_attention(q, k, v, causal=True, cfg=cfg,
-                            window=cfg.sliding_window)
+                            window=cfg.sliding_window, kv_mask=kv_mask)
     out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
     return L.dense(p["wo"], out, cfg), (k, v)
 
 
-def _block_forward(p, x, positions, cfg: ModelConfig):
+def _block_forward(p, x, positions, cfg: ModelConfig, kv_mask=None):
     a, kv = _attn_forward(p["attn"], L.rms_norm(p["ln1"], x, cfg),
-                          positions, cfg)
+                          positions, cfg, kv_mask=kv_mask)
     x = x + a
     h = L.rms_norm(p["ln2"], x, cfg)
     f = L.moe(p["moe"], h, cfg) if cfg.is_moe else L.mlp(p["mlp"], h, cfg)
@@ -237,6 +244,17 @@ def logits_fn(params, tokens, cfg: ModelConfig, visual=None):
 
 # ---------------------------------------------------------------------------
 # serving: cache init / prefill / decode_step
+#
+# Cache layout (engine-shaped):
+#   * K/V time axis is PREALLOCATED to ``max_len`` (or to the sliding
+#     window, run as a ring buffer written at ``pos % window``) — decode
+#     writes land in headroom instead of clamping onto the last slot.
+#   * ``len``     — scalar int32 write frontier (padded coordinates).
+#   * ``lens``    — (B,) int32 per-sequence valid token counts; with
+#     left-padded ragged prompts ``len - lens[b]`` is row b's padding
+#     offset and masks its pad slots out of decode attention.
+#   * ``max_len`` — int32 scalar, the preallocated absolute-position
+#     budget (cache maintenance ops must pass it through unchanged).
 # ---------------------------------------------------------------------------
 
 def _cache_dtype(cfg: ModelConfig):
@@ -245,22 +263,37 @@ def _cache_dtype(cfg: ModelConfig):
     return L.cdtype(cfg)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+def _cache_meta(batch: int, frontier: int, max_len: int, lens=None):
+    if lens is None:
+        lens = jnp.full((batch,), frontier, jnp.int32)
+    return {
+        "len": jnp.asarray(frontier, jnp.int32),
+        "lens": jnp.asarray(lens, jnp.int32),
+        "max_len": jnp.asarray(max_len, jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               window_ring: bool = True):
+    """Preallocated decode cache.  ``window_ring=False`` forces a
+    full-``max_len`` cache even under a sliding window (the golden
+    reference layout the ring buffer is tested against)."""
+    meta = _cache_meta(batch, 0, max_len)
     if cfg.mla:
         shape_c = (cfg.n_layers, batch, max_len, cfg.kv_lora_rank)
         shape_r = (cfg.n_layers, batch, max_len, cfg.qk_rope_dim)
         return {
             "c_kv": jnp.zeros(shape_c, _cache_dtype(cfg)),
             "k_rope": jnp.zeros(shape_r, _cache_dtype(cfg)),
-            "len": jnp.zeros((), jnp.int32),
+            **meta,
         }
     window = cfg.sliding_window or 0
-    t = min(max_len, window) if window else max_len
+    t = min(max_len, window) if (window and window_ring) else max_len
     shape = (cfg.n_layers, batch, t, cfg.n_kv_heads, cfg.head_dim)
     return {
         "k": jnp.zeros(shape, _cache_dtype(cfg)),
         "v": jnp.zeros(shape, _cache_dtype(cfg)),
-        "len": jnp.zeros((), jnp.int32),
+        **meta,
     }
 
 
@@ -270,14 +303,55 @@ def _maybe_quant_kv(x, cfg: ModelConfig):
     return x.astype(L.cdtype(cfg))
 
 
-def prefill(params, tokens, cfg: ModelConfig, visual=None):
-    """Run the full prompt, return (cache, logits at the last position)."""
+def _is_ring(cfg: ModelConfig, capacity: int) -> bool:
+    """Window-sized caches run as ring buffers; full-length caches (the
+    reference layout, or window >= max_len) stay linear.  When capacity
+    equals both the window and max_len the two layouts coincide (the
+    frontier never wraps), so the ambiguity is harmless."""
+    return bool(cfg.sliding_window) and capacity == cfg.sliding_window
+
+
+_pad_time = L.pad_cache_time
+
+
+def _ring_pack(kv, w: int):
+    """Fold prompt KV (L,B,S,...) with S > w into ring layout: slot i
+    holds the latest absolute position q <= S-1 with q % w == i."""
+    s = kv.shape[2]
+    idx = jnp.arange(w)
+    abs_q = (s - 1) - lax.rem((s - 1) - idx, w)           # all >= s - w >= 0
+    return jnp.take(kv, abs_q, axis=2)
+
+
+def prefill(params, tokens, cfg: ModelConfig, visual=None, *,
+            max_len=None, prompt_lens=None, window_ring: bool = True):
+    """Run the full prompt, return (cache, logits at the last position).
+
+    ``max_len`` preallocates decode headroom (default: no headroom, the
+    cache is exactly prompt-sized — decode_step will then refuse to
+    write past it instead of clamp-overwriting the last slot).
+
+    ``prompt_lens`` (B,) enables ragged batches: ``tokens`` is
+    LEFT-padded to a common length, row b's real tokens occupy the last
+    ``prompt_lens[b]`` slots, get RoPE positions 0..len-1, and pad keys
+    are masked out of attention for that row only.
+    """
     b, s = tokens.shape
-    positions = jnp.arange(s)[None, :]
+    ml = s if max_len is None else int(max_len)
+    if ml < s:
+        raise ValueError(f"prefill max_len={ml} < prompt length {s}")
+    if prompt_lens is None:
+        lens = jnp.full((b,), s, jnp.int32)
+        positions = jnp.arange(s)[None, :]
+        kv_mask = None
+    else:
+        lens = jnp.asarray(prompt_lens, jnp.int32)
+        positions = jnp.arange(s)[None, :] - (s - lens)[:, None]
+        kv_mask = positions >= 0
     x = _embed(params, tokens, cfg, visual)
 
     def body(h, lp):
-        h2, kv = _block_forward(lp, h, positions, cfg)
+        h2, kv = _block_forward(lp, h, positions, cfg, kv_mask=kv_mask)
         return h2, tuple(_maybe_quant_kv(t, cfg) for t in kv)
 
     body = jax.checkpoint(body) if cfg.remat == "layer" else body
@@ -286,50 +360,59 @@ def prefill(params, tokens, cfg: ModelConfig, visual=None):
     last = x[:, -1:, :]
     logits = (last @ _unembed_weight(params, cfg).astype(x.dtype))
 
+    meta = _cache_meta(b, s, ml, lens)
     if cfg.mla:
-        cache = {"c_kv": kvs[0], "k_rope": kvs[1],
-                 "len": jnp.asarray(s, jnp.int32)}
+        cache = {"c_kv": _pad_time(kvs[0], ml),
+                 "k_rope": _pad_time(kvs[1], ml), **meta}
     else:
-        cache = {"k": kvs[0], "v": kvs[1], "len": jnp.asarray(s, jnp.int32)}
+        window = cfg.sliding_window or 0
+        cap = min(ml, window) if (window and window_ring) else ml
+        pack = _ring_pack if s > cap else _pad_time
+        cache = {"k": pack(kvs[0], cap), "v": pack(kvs[1], cap), **meta}
     return cache, logits[:, 0, :].astype(jnp.float32)
 
 
-def _decode_attn_dense(p, x, k_cache, v_cache, pos, cfg: ModelConfig):
+def _decode_attn_dense(p, x, k_cache, v_cache, pos, lens, cfg: ModelConfig):
     b = x.shape[0]
+    capacity = k_cache.shape[1]
+    window = cfg.sliding_window or 0
+    ring = _is_ring(cfg, capacity)
     q = L.dense(p["wq"], x, cfg).reshape(b, 1, cfg.n_heads, cfg.head_dim)
     k = L.dense(p["wk"], x, cfg).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
     v = L.dense(p["wv"], x, cfg).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
-    q = L.apply_rope(q, pos[None, None], cfg.rope_theta)
-    k = L.apply_rope(k, pos[None, None], cfg.rope_theta)
+    q = L.apply_rope(q, lens[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, lens[:, None], cfg.rope_theta)
 
-    k_cache = lax.dynamic_update_slice_in_dim(
-        k_cache, _maybe_quant_kv(k, cfg), pos, 1)
-    v_cache = lax.dynamic_update_slice_in_dim(
-        v_cache, _maybe_quant_kv(v, cfg), pos, 1)
+    slot = lax.rem(pos, capacity) if ring else pos
+    k_cache = L.guarded_cache_update(
+        k_cache, _maybe_quant_kv(k, cfg), slot, 1)
+    v_cache = L.guarded_cache_update(
+        v_cache, _maybe_quant_kv(v, cfg), slot, 1)
     out = L.decode_attention(
-        q, k_cache, v_cache, pos + 1, cfg=cfg, kv_posit=cfg.kv_posit)
+        q, k_cache, v_cache, pos + 1, cfg=cfg, kv_posit=cfg.kv_posit,
+        window=window, start=pos - lens, ring=ring)
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     return L.dense(p["wo"], out, cfg), k_cache, v_cache
 
 
-def _decode_attn_mla(p, x, c_cache, r_cache, pos, cfg: ModelConfig):
+def _decode_attn_mla(p, x, c_cache, r_cache, pos, lens, cfg: ModelConfig):
     """Absorbed-matrix MLA decode: attend in the compressed latent space."""
     b = x.shape[0]
     q_lat = L.rms_norm(p["q_norm"], L.dense(p["wdq"], x, cfg), cfg)
     q = L.dense(p["wuq"], q_lat, cfg).reshape(
         b, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
     q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
-    q_rope = L.apply_rope(q_rope[:, None], pos[None, None],
+    q_rope = L.apply_rope(q_rope[:, None], lens[:, None],
                           cfg.rope_theta)[:, 0]
 
     dkv = L.dense(p["wdkv"], x, cfg)                      # (B,1,rank+rope)
     c_new, r_new = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
     c_new = L.rms_norm(p["kv_norm"], c_new, cfg)
-    r_new = L.apply_rope(r_new[:, :, None, :], pos[None, None],
+    r_new = L.apply_rope(r_new[:, :, None, :], lens[:, None],
                          cfg.rope_theta)[:, :, 0, :]
-    c_cache = lax.dynamic_update_slice_in_dim(
+    c_cache = L.guarded_cache_update(
         c_cache, _maybe_quant_kv(c_new, cfg), pos, 1)
-    r_cache = lax.dynamic_update_slice_in_dim(
+    r_cache = L.guarded_cache_update(
         r_cache, _maybe_quant_kv(r_new, cfg), pos, 1)
 
     c = c_cache
@@ -349,8 +432,10 @@ def _decode_attn_mla(p, x, c_cache, r_cache, pos, cfg: ModelConfig):
     scores += jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32), r)
     scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
     t_len = c.shape[1]
-    valid = jnp.arange(t_len)[None, None, :] <= pos
-    scores = jnp.where(valid, scores * scale, -1e30)
+    t_pos = jnp.arange(t_len)
+    valid = (t_pos[None, :] <= pos) & \
+        (t_pos[None, :] >= (pos - lens)[:, None])         # (B,T)
+    scores = jnp.where(valid[:, None, :], scores * scale, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     ctx_lat = jnp.einsum("bht,btr->bhr", probs, c)        # (B,H,rank)
     wuv = L.maybe_dequant(p["wuv"]["w"], cfg).reshape(
@@ -360,18 +445,31 @@ def _decode_attn_mla(p, x, c_cache, r_cache, pos, cfg: ModelConfig):
     return L.dense(p["wo"], out, cfg), c_cache, r_cache
 
 
+def _decode_lens(cache, pos, batch: int):
+    lens = cache.get("lens")
+    if lens is None:                         # legacy cache without metadata
+        lens = jnp.broadcast_to(pos, (batch,))
+    return lens
+
+
 def decode_step(params, cache, token, cfg: ModelConfig):
     """token: (B,) int32 -> (logits (B,V) f32, new cache)."""
     pos = cache["len"]
+    b = token.shape[0]
+    lens = _decode_lens(cache, pos, b)
     x = params["tok_embed"][token][:, None, :].astype(L.cdtype(cfg))
     if cfg.scale_embed:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
 
     if cfg.mla:
+        L.check_cache_capacity(pos, cache["c_kv"].shape[2],
+                               "MLA latent cache")
+
         def body(h, layer):
             lp, c_c, r_c = layer
             a, c_c, r_c = _decode_attn_mla(
-                lp["attn"], L.rms_norm(lp["ln1"], h, cfg), c_c, r_c, pos, cfg)
+                lp["attn"], L.rms_norm(lp["ln1"], h, cfg), c_c, r_c,
+                pos, lens, cfg)
             h = h + a
             hh = L.rms_norm(lp["ln2"], h, cfg)
             f = L.moe(lp["moe"], hh, cfg) if cfg.is_moe else \
@@ -380,12 +478,18 @@ def decode_step(params, cache, token, cfg: ModelConfig):
 
         x, (c_new, r_new) = lax.scan(
             body, x, (params["layers"], cache["c_kv"], cache["k_rope"]))
-        new_cache = {"c_kv": c_new, "k_rope": r_new, "len": pos + 1}
+        new_cache = dict(cache, c_kv=c_new, k_rope=r_new,
+                         len=pos + 1, lens=lens + 1)
     else:
+        capacity = cache["k"].shape[2]
+        if not _is_ring(cfg, capacity):
+            L.check_cache_capacity(pos, capacity)
+
         def body(h, layer):
             lp, k_c, v_c = layer
             a, k_c, v_c = _decode_attn_dense(
-                lp["attn"], L.rms_norm(lp["ln1"], h, cfg), k_c, v_c, pos, cfg)
+                lp["attn"], L.rms_norm(lp["ln1"], h, cfg), k_c, v_c,
+                pos, lens, cfg)
             h = h + a
             hh = L.rms_norm(lp["ln2"], h, cfg)
             f = L.moe(lp["moe"], hh, cfg) if cfg.is_moe else \
@@ -394,7 +498,7 @@ def decode_step(params, cache, token, cfg: ModelConfig):
 
         x, (k_new, v_new) = lax.scan(
             body, x, (params["layers"], cache["k"], cache["v"]))
-        new_cache = {"k": k_new, "v": v_new, "len": pos + 1}
+        new_cache = dict(cache, k=k_new, v=v_new, len=pos + 1, lens=lens + 1)
 
     x = L.rms_norm(params["final_norm"], x, cfg)
     logits = (x[:, 0, :] @ _unembed_weight(params, cfg).astype(x.dtype))

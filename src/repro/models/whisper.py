@@ -180,12 +180,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
         "k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
         "ck": jnp.zeros(ckv, dt), "cv": jnp.zeros(ckv, dt),
         "len": jnp.zeros((), jnp.int32),
+        "lens": jnp.zeros((batch,), jnp.int32),
+        "max_len": jnp.asarray(max_len, jnp.int32),
     }
 
 
-def prefill(params, tokens, cfg: ModelConfig, frames=None):
+_pad_time = L.pad_cache_time
+
+
+def prefill(params, tokens, cfg: ModelConfig, frames=None, *,
+            max_len=None):
     """Encode audio; precompute cross-attention KV; run the prompt tokens
-    through the decoder caching self-attention KV."""
+    through the decoder caching self-attention KV.  ``max_len``
+    preallocates decode headroom on the self-attention cache."""
     from repro.core.convert import f32_to_posit
 
     def quant(t):
@@ -218,8 +225,14 @@ def prefill(params, tokens, cfg: ModelConfig, frames=None):
     x, (ks, vs, cks, cvs) = lax.scan(body, x, params["dec_layers"])
     x = L.layer_norm(params["dec_ln"], x)
     logits = (x[:, -1, :] @ params["tok_embed"].T.astype(x.dtype))
-    cache = {"k": ks, "v": vs, "ck": cks, "cv": cvs,
-             "len": jnp.asarray(s, jnp.int32)}
+    ml = s if max_len is None else int(max_len)
+    if ml < s:
+        raise ValueError(f"prefill max_len={ml} < prompt length {s}")
+    cache = {"k": _pad_time(ks, ml), "v": _pad_time(vs, ml),
+             "ck": cks, "cv": cvs,
+             "len": jnp.asarray(s, jnp.int32),
+             "lens": jnp.full((b,), s, jnp.int32),
+             "max_len": jnp.asarray(ml, jnp.int32)}
     return cache, logits.astype(jnp.float32)
 
 
@@ -227,6 +240,8 @@ def decode_step(params, cache, token, cfg: ModelConfig):
     from repro.core.convert import f32_to_posit
     pos = cache["len"]
     b = token.shape[0]
+    L.check_cache_capacity(pos, cache["k"].shape[2],
+                           "decoder self-attention cache")
     x = params["tok_embed"][token][:, None, :].astype(L.cdtype(cfg))
     x = x + lax.dynamic_slice_in_dim(
         params["pos_embed"], pos, 1, 0).astype(x.dtype)[None, 0]
@@ -240,8 +255,8 @@ def decode_step(params, cache, token, cfg: ModelConfig):
         lp, k_c, v_c, ck_c, cv_c = layer
         xin = L.layer_norm(lp["ln1"], h)
         q, k, v = _qkv(lp["self"], xin, cfg)
-        k_c = lax.dynamic_update_slice_in_dim(k_c, quant(k), pos, 1)
-        v_c = lax.dynamic_update_slice_in_dim(v_c, quant(v), pos, 1)
+        k_c = L.guarded_cache_update(k_c, quant(k), pos, 1)
+        v_c = L.guarded_cache_update(v_c, quant(v), pos, 1)
         a = L.decode_attention(q, k_c, v_c, pos + 1, cfg=cfg,
                                kv_posit=cfg.kv_posit)
         h = h + L.dense(lp["self"]["wo"], a.reshape(b, 1, -1), cfg)
@@ -260,4 +275,6 @@ def decode_step(params, cache, token, cfg: ModelConfig):
     x = L.layer_norm(params["dec_ln"], x)
     logits = (x[:, 0, :] @ params["tok_embed"].T.astype(x.dtype))
     new_cache = dict(cache, k=k_new, v=v_new, len=pos + 1)
+    if "lens" in cache:
+        new_cache["lens"] = cache["lens"] + 1
     return logits.astype(jnp.float32), new_cache

@@ -201,3 +201,67 @@ def test_merge_caches_under_jit():
              np.asarray([8, 9]))               # shape-mismatched metadata
     with pytest.raises(ValueError, match="metadata"):
         jax.jit(lambda x, y: kv.merge_caches(x, y, "posit16"))(a, bad)
+
+
+# ---------------------------------------------------------------------------
+# Engine-shaped caches (preallocated ring-buffer serving engine)
+# ---------------------------------------------------------------------------
+
+def _engine_shaped_cache(rng, batch=2, cap=8, frontier=6):
+    """A cache with the serving engine's metadata: scalar ``len`` write
+    frontier, per-sequence ``lens``, preallocated ``max_len``."""
+    return {
+        "k": jnp.asarray(_rand_wire(rng, (2, batch, cap, 2, 4))).astype(
+            POSIT16.storage_dtype),
+        "v": jnp.asarray(_rand_wire(rng, (2, batch, cap, 2, 4))).astype(
+            POSIT16.storage_dtype),
+        "len": jnp.asarray(frontier, jnp.int32),
+        "lens": jnp.asarray([frontier, frontier - 2], jnp.int32),
+        "max_len": jnp.asarray(32, jnp.int32),
+    }
+
+
+def test_maintenance_ops_pass_engine_metadata_through():
+    """scale_cache/merge_caches on engine-shaped caches must transform
+    only the pattern leaves and pass len/lens/max_len through unchanged."""
+    rng = np.random.default_rng(30)
+    cache = _engine_shaped_cache(rng)
+
+    scaled = kv.scale_cache(cache, 0.5, "posit16")
+    for leaf in ("len", "lens", "max_len"):
+        np.testing.assert_array_equal(np.asarray(scaled[leaf]),
+                                      np.asarray(cache[leaf]))
+    assert not (np.asarray(scaled["k"]) == np.asarray(cache["k"])).all()
+
+    other = _engine_shaped_cache(rng)      # fresh patterns, same metadata
+    merged = kv.merge_caches(cache, other, "posit16", weight_a=0.25)
+    for leaf in ("len", "lens", "max_len"):
+        np.testing.assert_array_equal(np.asarray(merged[leaf]),
+                                      np.asarray(cache[leaf]))
+
+    # inconsistent per-sequence lens must refuse to blend
+    bad = dict(other, lens=jnp.asarray([1, 1], jnp.int32))
+    with pytest.raises(ValueError, match="metadata"):
+        kv.merge_caches(cache, bad, "posit16")
+
+
+def test_cache_report_ring_buffer_ratios():
+    """cache_report must give posit-vs-f32 ratios on window-sized
+    (ring-buffer) caches: ~2x for posit16 K/V, ~4x for posit8."""
+    import dataclasses
+
+    from repro import configs
+    from repro.models import transformer as T
+
+    cfg = configs.get_config("phi3-medium-14b").reduced(
+        compute_dtype="float32", sliding_window=8)
+    for name, lo, hi in (("posit16", 1.9, 2.01), ("posit8", 3.5, 4.01)):
+        c = dataclasses.replace(cfg, kv_posit=name)
+        cache = T.init_cache(c, batch=2, max_len=64)
+        assert cache["k"].shape[2] == 8        # ring: window-sized
+        rep = kv.cache_report(cache)
+        assert lo < rep["ratio"] <= hi, (name, rep)
+        assert rep["bytes"] < rep["f32_bytes"]
+    # f32 cache reports ~1x
+    rep = kv.cache_report(T.init_cache(cfg, batch=2, max_len=64))
+    assert 0.99 <= rep["ratio"] <= 1.01

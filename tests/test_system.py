@@ -66,7 +66,9 @@ def test_serve_roundtrip_with_posit_cache(kv):
     params = fam.init_params(jax.random.PRNGKey(2), cfg)
     rng = np.random.default_rng(0)
     tokens = jnp.asarray(rng.integers(1, cfg.vocab, (2, 12)), jnp.int32)
-    cache, logits = fam.prefill(params, tokens, cfg)
+    # max_len preallocates decode headroom: the seed's prompt-sized cache
+    # made every decode step clamp-overwrite the last KV slot
+    cache, logits = fam.prefill(params, tokens, cfg, max_len=16)
     assert np.isfinite(np.asarray(logits)).all()
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     for _ in range(4):
@@ -85,7 +87,7 @@ def test_posit16_kv_cache_matches_f32_generations():
     tokens = jnp.asarray(rng.integers(1, cfg0.vocab, (2, 16)), jnp.int32)
 
     def gen(cfg):
-        cache, logits = fam.prefill(params, tokens, cfg)
+        cache, logits = fam.prefill(params, tokens, cfg, max_len=24)
         out = [int(t) for t in np.asarray(jnp.argmax(logits, -1))]
         outs = [out]
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
