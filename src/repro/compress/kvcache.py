@@ -16,6 +16,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from jax import lax
+
 from repro.core.convert import f32_to_posit, posit_to_f32
 from repro.core.tracing import is_tracer as _is_tracer
 from repro.kernels import ops as kops
@@ -67,6 +69,117 @@ def cache_report(cache) -> dict:
         for x in leaves)
     return {"bytes": actual, "f32_bytes": f32,
             "ratio": f32 / max(actual, 1)}
+
+
+# ---------------------------------------------------------------------------
+# Per-slot cache surgery (continuous-batching scheduler support)
+#
+# Engine-shaped caches carry metadata leaves ``len`` (scalar padded-write
+# frontier), ``lens`` ((B,) per-row valid counts) and ``max_len``.  The
+# scheduler treats the batch dimension as a SLOT POOL: retired rows are
+# wiped (``reset_slots``), the shared frontier is moved so freed headroom
+# is reclaimed or a long admitted prompt fits (``compact``), and a
+# freshly prefilled single-prompt cache is grafted into a free row
+# (``adopt_row``).  All three are jit-safe (shifts/rows may be traced) and
+# layout-agnostic: time-axis leaves roll circularly, which is exact for
+# linear caches (stale slots stay masked by ``lens``) and IS the frontier
+# relabelling for ring buffers (slot = pos % T).
+# ---------------------------------------------------------------------------
+
+# Leaves with a (stack, batch, time, ...) layout that must move with the
+# write frontier; everything else either has no time axis (``ssm`` state,
+# metadata) or is not cache content.
+_TIME_LEAVES = frozenset(
+    {"k", "v", "c_kv", "k_rope", "k_swa", "v_swa", "k_glb", "v_glb"})
+# Per-row state without a time axis (cleared on reset, copied on adopt).
+_ROW_LEAVES = frozenset({"ssm"})
+
+
+def reset_slots(cache, rows):
+    """Retire the given batch rows: ``lens -> 0`` and their cache content
+    zeroed.  ``rows``: (B,) bool, True = free this slot.
+
+    The zeroing is hygiene (attention already masks retired rows via
+    ``lens``); the load-bearing part is the metadata reset, which lets
+    ``compact`` reclaim the headroom the retired rows were pinning.
+    """
+    from repro.models import layers as L
+
+    rows = jnp.asarray(rows, bool)
+    out = dict(cache)
+    for key, leaf in cache.items():
+        if key in _TIME_LEAVES or key in _ROW_LEAVES:
+            out[key] = L.reset_cache_rows(leaf, rows)
+    out["lens"] = jnp.where(rows, 0, jnp.asarray(cache["lens"], jnp.int32))
+    return out
+
+
+def compact(cache, target_len=None):
+    """Move the shared write frontier to ``target_len`` (default: the
+    tightest frontier, ``max(lens)``), rolling every time-axis leaf so
+    row content still ends at the frontier.
+
+    Shrinking (the common case after retirements) reclaims headroom so
+    decode chunks keep fitting in ``max_len``; growing makes room for an
+    admitted prompt longer than the current frontier.  ``lens`` and
+    ``max_len`` are unchanged — per-row content is only relabelled.
+    """
+    from repro.models import layers as L
+
+    cur = jnp.asarray(cache["len"], jnp.int32)
+    target = (jnp.max(jnp.asarray(cache["lens"], jnp.int32))
+              if target_len is None else jnp.asarray(target_len, jnp.int32))
+    if not _is_tracer(target) and not _is_tracer(cache["max_len"]):
+        if int(target) > int(cache["max_len"]):
+            raise ValueError(
+                f"compact: target frontier {int(target)} exceeds cache "
+                f"max_len {int(cache['max_len'])}")
+    shift = target - cur
+    out = dict(cache)
+    for key, leaf in cache.items():
+        if key in _TIME_LEAVES:
+            out[key] = L.roll_cache_time(leaf, shift)
+    out["len"] = target
+    return out
+
+
+def adopt_row(cache, row_cache, row):
+    """Graft a batch-1 prefilled cache into slot ``row`` of a pool cache.
+
+    ``row_cache`` must come from the same model/config (leaf shapes match
+    except batch = 1) with frontier ``row_cache['len'] <= cache['len']``:
+    its content is rolled up so the prompt ends at the pool's shared
+    frontier (per-row RoPE positions are content-relative, so relabelling
+    padded slots is free), then scattered into batch row ``row``; the
+    row's ``lens`` entry takes the prompt length.
+    """
+    cur = cache["len"]
+    src = row_cache["len"]
+    if not _is_tracer(cur) and not _is_tracer(src) \
+            and int(src) > int(cur):
+        raise ValueError(
+            f"adopt_row: admitted prompt frontier {int(src)} exceeds the "
+            f"pool frontier {int(cur)}; compact(cache, target_len="
+            f"{int(src)}) first")
+    from repro.models import layers as L
+
+    shift = jnp.asarray(cur, jnp.int32) - jnp.asarray(src, jnp.int32)
+    row = jnp.asarray(row, jnp.int32)
+    out = dict(cache)
+    for key, leaf in cache.items():
+        if key in _TIME_LEAVES and key in row_cache:
+            upd = L.roll_cache_time(row_cache[key], shift)
+            starts = (jnp.zeros((), jnp.int32), row) + \
+                tuple(jnp.zeros((), jnp.int32) for _ in range(leaf.ndim - 2))
+            out[key] = lax.dynamic_update_slice(leaf, upd, starts)
+        elif key in _ROW_LEAVES and key in row_cache:
+            starts = (jnp.zeros((), jnp.int32), row) + \
+                tuple(jnp.zeros((), jnp.int32) for _ in range(leaf.ndim - 2))
+            out[key] = lax.dynamic_update_slice(leaf, row_cache[key], starts)
+    out["lens"] = lax.dynamic_update_slice(
+        jnp.asarray(cache["lens"], jnp.int32),
+        jnp.asarray(row_cache["lens"], jnp.int32), (row,))
+    return out
 
 
 # ---------------------------------------------------------------------------

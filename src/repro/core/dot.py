@@ -129,10 +129,16 @@ def _top_and_rest(limbs, lz):
         off = 32 * (_NLIMB - 1 - idx)    # limb bit offset: 96, 64, 32, 0
         s = off + lz - (nbits - 32)      # alignment into the top word
         top = top | jnp.where(s >= 0, sll(x, s), srl(x, -s))
-        # bits of x*2^(off+lz) below bit 96: width of the low mask
+        # bits of x*2^(off+lz) below bit 96: width of the low mask.
+        # w <= 0 means the whole limb lands at/above bit 96 — nothing
+        # below — and MUST short-circuit: sll(1, w) - 1 underflows to
+        # all-ones for negative w, which set a spurious sticky on every
+        # normalized value and broke round-to-nearest-even ties (caught
+        # by the exhaustive posit8 conformance sweep).
         w = (nbits - 32) - (off + lz)
-        mask = sll(u32(1), w) - u32(1)   # w<=0 -> mask 0
-        nz = jnp.where(w >= 32, x != 0, (x & mask) != 0)
+        mask = sll(u32(1), w) - u32(1)
+        nz = jnp.where(w >= 32, x != 0,
+                       jnp.where(w > 0, (x & mask) != 0, False))
         rest_nonzero = rest_nonzero | nz
     return top, rest_nonzero
 

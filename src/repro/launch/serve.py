@@ -10,6 +10,18 @@ actual vs f32-equivalent cache bytes.
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
       --reduced --batch 4 --prompt-len 32 --gen 16 --kv-posit posit16 \
       --max-len 64 --temperature 0.7 --seed 0
+
+``--continuous`` switches to the iteration-level scheduler
+(``repro.runtime.scheduler``): ``--n-requests`` requests arrive on a
+simulated Poisson trace (``--arrival-rate`` expected arrivals per decode
+step), prompts/generation lengths are ragged, and ``--batch`` becomes
+the slot-pool width.  Requests join and leave between fixed
+``--chunk-size`` decode chunks (each one compiled dispatch); the report
+prints goodput and p50/p99 request latency in decode steps.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
+      --reduced --continuous --batch 4 --n-requests 16 \
+      --arrival-rate 0.2 --chunk-size 8 --max-len 64
 """
 from __future__ import annotations
 
@@ -26,6 +38,75 @@ from repro import configs
 from repro.compress.kvcache import cache_report
 from repro.models import get_family
 from repro.runtime.engine import Engine
+from repro.runtime.scheduler import Scheduler
+
+
+def poisson_trace(rng, n_requests, rate, vocab, prompt_len, gen):
+    """Ragged request trace: Poisson arrivals (``rate`` expected requests
+    per decode step), uniform prompt/generation lengths."""
+    arrivals = np.cumsum(rng.exponential(1.0 / max(rate, 1e-9),
+                                         size=n_requests))
+    out = []
+    for t in arrivals:
+        plen = int(rng.integers(max(2, prompt_len // 2), prompt_len + 1))
+        g = int(rng.integers(max(2, gen // 4), gen + 1))
+        out.append((float(t), rng.integers(1, vocab, plen).tolist(), g))
+    return out
+
+
+def drive_trace(sched: Scheduler, trace):
+    """Feed a (arrival_step, prompt, gen) trace through a scheduler,
+    advancing the simulation clock through idle gaps; returns
+    ``{rid: Completion}`` keyed in trace order."""
+    pending = list(trace)
+    done = {}
+    order = {}
+    while pending or sched.has_work:
+        while pending and pending[0][0] <= sched.steps_run:
+            t, prompt, gen = pending.pop(0)
+            rid = sched.submit(prompt, gen)
+            order[rid] = len(order)
+        if not sched.has_work:
+            # idle: jump the decode-step clock to the next arrival
+            sched.steps_run = max(sched.steps_run,
+                                  int(np.ceil(pending[0][0])))
+            continue
+        for c in sched.step():
+            done[c.rid] = c
+    return done, order
+
+
+def run_continuous(args, cfg, params):
+    rng = np.random.default_rng(args.seed)
+    # worst-case slot demand: prompt + gen - 1 cached tokens plus a full
+    # chunk of frontier headroom (overshoot before retirement)
+    max_len = args.max_len or (args.prompt_len + args.gen - 1 +
+                               args.chunk_size)
+    engine = Engine(cfg, params, max_len=max_len,
+                    temperature=args.temperature, seed=args.seed)
+    sched = Scheduler(engine, n_slots=args.batch,
+                      chunk_size=args.chunk_size)
+    trace = poisson_trace(rng, args.n_requests, args.arrival_rate,
+                          cfg.vocab, args.prompt_len, args.gen)
+    t0 = time.time()
+    done, _ = drive_trace(sched, trace)
+    dt = time.time() - t0
+    rep = cache_report(sched.cache)
+
+    useful = sum(len(c.tokens) for c in done.values())
+    lat = np.array(sorted(c.latency_steps for c in done.values()))
+    goodput = useful / max(sched.steps_run, 1)
+    print(f"continuous: {len(done)} requests, {useful} tokens in "
+          f"{sched.n_chunks} chunks ({sched.steps_run} decode steps, "
+          f"{dt:.2f}s incl. compile)")
+    print(f"  goodput {goodput:.2f} tok/step of a {args.batch}-slot pool "
+          f"({useful / max(dt, 1e-9):.1f} tok/s wall); latency p50 "
+          f"{np.percentile(lat, 50):.0f} p99 {np.percentile(lat, 99):.0f} "
+          f"steps")
+    print(f"  cache: {rep['bytes']:,} bytes of {rep['f32_bytes']:,} "
+          f"f32-equiv ({rep['ratio']:.2f}x, kv_posit={cfg.kv_posit}, "
+          f"max_len={max_len})")
+    return done
 
 
 def main(argv=None):
@@ -47,6 +128,18 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 = softmax sampling")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: requests arrive on a "
+                         "simulated Poisson trace and join/leave between "
+                         "decode chunks (transformer family only)")
+    ap.add_argument("--arrival-rate", type=float, default=0.2,
+                    help="expected request arrivals per decode step "
+                         "(with --continuous)")
+    ap.add_argument("--n-requests", type=int, default=16,
+                    help="trace length (with --continuous)")
+    ap.add_argument("--chunk-size", type=int, default=8,
+                    help="decode steps between scheduling rounds "
+                         "(with --continuous)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch)
@@ -58,6 +151,9 @@ def main(argv=None):
     fam = get_family(cfg)
     rng = np.random.default_rng(args.seed)
     params = fam.init_params(jax.random.PRNGKey(0), cfg)
+
+    if args.continuous:
+        return run_continuous(args, cfg, params)
 
     if args.ragged:
         lens = rng.integers(max(2, args.prompt_len // 2),

@@ -275,7 +275,9 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     }
 
 
-def decode_step(params, cache, token, cfg: ModelConfig):
+def decode_step(params, cache, token, cfg: ModelConfig, active=None):
+    """``active``: optional (B,) bool scheduler mask — inactive rows'
+    ``lens`` stay put (see ``transformer.decode_step``)."""
     from repro.core.convert import f32_to_posit
     pos = cache["len"]
     bsz = token.shape[0]
@@ -349,7 +351,9 @@ def decode_step(params, cache, token, cfg: ModelConfig):
     new_cache = dict(cache, k_swa=k_swa, v_swa=v_swa, k_glb=k_glb,
                      v_glb=v_glb, ssm=ssm, len=pos + 1)
     if "lens" in cache:
-        new_cache["lens"] = cache["lens"] + 1
+        adv = jnp.ones((bsz,), jnp.int32) if active is None \
+            else jnp.asarray(active).astype(jnp.int32)
+        new_cache["lens"] = cache["lens"] + adv
     return logits.astype(jnp.float32), new_cache
 
 

@@ -376,6 +376,37 @@ def guarded_cache_update(arr, upd, idx, axis: int):
     return jnp.where(idx < arr.shape[axis], new, arr)
 
 
+def roll_cache_time(kv, shift):
+    """Circularly shift a stacked-layer KV time axis (L, B, T, ...) by
+    ``shift`` slots (traced shifts allowed).
+
+    This is the one primitive behind cache *compaction* and *admission*
+    in the continuous-batching scheduler, and it is correct for BOTH
+    cache layouts:
+
+    * linear caches: content occupying padded slots ``[len - l, len)``
+      moves to ``[len + shift - l, len + shift)``; slots vacated at
+      either end hold stale data that the per-row ``lens`` masks already
+      exclude (and that a later admission overwrites wholesale);
+    * ring buffers (capacity T, writes at ``pos % T``): a frontier move
+      of ``shift`` relabels slot ``q % T`` to ``(q + shift) % T`` — the
+      circular roll IS that relabelling, no second case needed.
+    """
+    return jnp.roll(kv, shift, axis=2)
+
+
+def reset_cache_rows(kv, row_mask, batch_axis: int = 1):
+    """Zero the given batch rows of a stacked cache leaf.
+
+    ``row_mask``: (B,) bool, True = clear.  Retired serving slots are
+    wiped so a freed row never leaks a previous request's KV into
+    reports or debugging dumps (attention already masks it out).
+    """
+    shape = [1] * kv.ndim
+    shape[batch_axis] = row_mask.shape[0]
+    return jnp.where(row_mask.reshape(shape), jnp.zeros_like(kv), kv)
+
+
 def pad_cache_time(kv, t: int):
     """Zero-pad the stacked-layer KV time axis (L,B,S,...) up to ``t`` —
     how prefill turns exactly-prompt-sized KV into a cache with decode

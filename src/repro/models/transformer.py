@@ -452,11 +452,23 @@ def _decode_lens(cache, pos, batch: int):
     return lens
 
 
-def decode_step(params, cache, token, cfg: ModelConfig):
-    """token: (B,) int32 -> (logits (B,V) f32, new cache)."""
+def decode_step(params, cache, token, cfg: ModelConfig, active=None):
+    """token: (B,) int32 -> (logits (B,V) f32, new cache).
+
+    ``active``: optional (B,) bool — rows that hold a live request.  The
+    shared padded frontier ``len`` always advances (every row is written
+    at the same slot), but an inactive row's ``lens`` stays put, so an
+    empty scheduler slot never accretes phantom valid tokens: its
+    attention window stays pinned to the (masked) frontier and, crucially,
+    its ``lens`` cannot hold ``compact`` back from reclaiming headroom.
+    Inactive rows still produce (discarded) logits — batched decode has
+    no per-row early exit.
+    """
     pos = cache["len"]
     b = token.shape[0]
     lens = _decode_lens(cache, pos, b)
+    adv = jnp.ones((b,), jnp.int32) if active is None \
+        else jnp.asarray(active).astype(jnp.int32)
     x = params["tok_embed"][token][:, None, :].astype(L.cdtype(cfg))
     if cfg.scale_embed:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
@@ -479,7 +491,7 @@ def decode_step(params, cache, token, cfg: ModelConfig):
         x, (c_new, r_new) = lax.scan(
             body, x, (params["layers"], cache["c_kv"], cache["k_rope"]))
         new_cache = dict(cache, c_kv=c_new, k_rope=r_new,
-                         len=pos + 1, lens=lens + 1)
+                         len=pos + 1, lens=lens + adv)
     else:
         capacity = cache["k"].shape[2]
         if not _is_ring(cfg, capacity):
@@ -498,7 +510,8 @@ def decode_step(params, cache, token, cfg: ModelConfig):
 
         x, (k_new, v_new) = lax.scan(
             body, x, (params["layers"], cache["k"], cache["v"]))
-        new_cache = dict(cache, k=k_new, v=v_new, len=pos + 1, lens=lens + 1)
+        new_cache = dict(cache, k=k_new, v=v_new, len=pos + 1,
+                         lens=lens + adv)
 
     x = L.rms_norm(params["final_norm"], x, cfg)
     logits = (x[:, 0, :] @ _unembed_weight(params, cfg).astype(x.dtype))

@@ -172,6 +172,66 @@ class Engine:
 
         return jax.jit(run)
 
+    def _chunk_fn(self, n_steps: int):
+        """Fixed-size decode chunk: ``n_steps`` masked decode steps in ONE
+        ``lax.scan`` — the continuous-batching quantum.  Jitted once per
+        chunk size, so admissions/retirements between chunks never
+        recompile anything."""
+        cfg, fam, temp = self.cfg, self.fam, self.temperature
+        masked = cfg.family in ("transformer", "hymba")
+
+        def run(params, cache, tok, key, active):
+            def step(carry, _):
+                cache, tok, key = carry
+                if masked:
+                    logits, cache = fam.decode_step(params, cache, tok,
+                                                    cfg, active=active)
+                else:
+                    logits, cache = fam.decode_step(params, cache, tok, cfg)
+                nxt, key = sample_token(logits, key, temp)
+                return (cache, nxt, key), nxt
+
+            (cache, _, key), toks = lax.scan(
+                step, (cache, tok, key), length=n_steps)
+            return cache, toks.T, key                     # (B, n_steps)
+
+        return jax.jit(run)
+
+    def decode_chunk(self, cache, tokens, n_steps: int, *, active=None):
+        """Advance every slot by ``n_steps`` decode steps in one compiled
+        dispatch; returns (cache, (B, n_steps) int32 sampled tokens).
+
+        ``tokens``: (B,) the last sampled token per row (admission seeds
+        this from the prefill logits).  ``active``: (B,) bool — inactive
+        (empty / already-finished) rows still run through the batched
+        model but their ``lens`` metadata stays frozen and their sampled
+        tokens are garbage the scheduler discards.
+
+        Raises if the chunk would run the write frontier past ``max_len``
+        — the frontier is concrete between dispatches, so the guard is
+        free, and without it the traced in-chunk writes would be silently
+        DROPPED (the no-clamp guarantee), corrupting the tokens.  Callers
+        (the scheduler) compact the cache first instead.
+        """
+        from repro.core.tracing import is_tracer
+        if not is_tracer(cache["len"]) and \
+                int(cache["len"]) + int(n_steps) > self.max_len:
+            raise ValueError(
+                f"decode_chunk: frontier {int(cache['len'])} + "
+                f"{int(n_steps)} steps exceeds engine max_len "
+                f"{self.max_len}; compact the cache (kvcache.compact) "
+                "or retire rows first")
+        tokens = jnp.asarray(tokens, jnp.int32)
+        b = tokens.shape[0]
+        active = jnp.ones((b,), bool) if active is None \
+            else jnp.asarray(active, bool)
+        key = ("chunk", int(n_steps))
+        if key not in self._decode_jit:
+            self._decode_jit[key] = self._chunk_fn(int(n_steps))
+        cache, toks, self._key = self._decode_jit[key](
+            self.params, cache, tokens, self._key, active)
+        return cache, toks
+
     def _check_fits(self, padded_len: int, max_new_tokens: int):
         need = padded_len + max_new_tokens - 1        # last token not cached
         if need > self.max_len:

@@ -1,0 +1,293 @@
+"""Continuous-batching request scheduler over the serving engine.
+
+The engine (PR 3) decodes a *fixed* batch: every request prefills
+together and decodes together, so one long generation pins the whole
+batch and finished rows burn decode steps producing garbage.  Under
+ragged traffic that is exactly the goodput collapse continuous batching
+(Orca-style iteration-level scheduling) fixes: treat the preallocated
+cache's batch dimension as a SLOT POOL, retire rows the moment they
+finish, and prefill queued prompts into the freed rows between decode
+chunks.
+
+Mechanics
+---------
+* ``submit()`` enqueues a request (prompt + per-request ``max_new_tokens``
+  / ``eos_id``); ``step()`` runs one scheduling round:
+
+      retire finished slots  ->  admit queued prompts into free slots
+      ->  ONE fixed-size decode chunk (a single compiled ``lax.scan``
+      dispatch whose shapes never change, so the DECODE path never
+      recompiles; admission prefill is jit-specialized per prompt
+      length — pad/bucket prompt lengths client-side if cold-prefill
+      latency spikes matter)
+
+* admission prefills the prompt alone (batch 1 — byte-identical to what
+  an isolated ``Engine.generate`` would compute), samples the first
+  token from the prefill logits, then grafts the row into the pool with
+  ``kvcache.adopt_row``; the pool keeps ONE shared padded write frontier
+  (``cache['len']``) and per-row valid counts (``lens``), so each row's
+  RoPE positions and attention masks stay content-relative — a row
+  admitted at frontier 40 generates exactly the tokens it would have
+  generated alone (see ``tests/test_scheduler.py``).
+* retirement is ``kvcache.reset_slots`` (lens -> 0 + content wipe); the
+  shared frontier is pulled back by ``kvcache.compact`` whenever the next
+  chunk would not fit, so slot reuse never exhausts ``max_len``.
+* inactive rows ride along in the batched decode with frozen ``lens``
+  (``decode_step(active=...)``) and their sampled tokens are discarded.
+
+Sampling: greedy decoding is deterministic and token-identical to
+isolated generation.  With ``temperature > 0`` the scheduler is still
+deterministic for a fixed seed, but the PRNG stream interleaves rows
+differently than isolated calls would, so per-request identity only
+holds for greedy.
+
+Time is measured in *decode steps* (the simulation clock): wall-clock
+per step is constant for a fixed pool, so step-latency and goodput
+ratios transfer to hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress import kvcache as kvc
+from repro.models import get_family
+from .engine import Engine, sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival_step: int = 0          # simulation clock at submit()
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray             # (n,) int32, truncated at EOS/max_new
+    arrival_step: int              # when the request was submitted
+    admitted_step: int             # decode-step clock at admission
+    finished_step: int             # decode-step clock when retired
+
+    @property
+    def latency_steps(self) -> int:
+        return self.finished_step - self.arrival_step
+
+    @property
+    def queue_steps(self) -> int:
+        return self.admitted_step - self.arrival_step
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    emitted: list
+    admitted_step: int
+    done: bool = False
+
+    @property
+    def lens(self) -> int:
+        """Row's cache occupancy: prompt + generated-so-far minus the
+        not-yet-cached last token (mirrors the device ``lens`` entry)."""
+        return len(self.req.prompt) + len(self.emitted) - 1
+
+
+class Scheduler:
+    """Iteration-level (continuous) batching over an :class:`Engine`.
+
+    ``n_slots`` is the pool width (the compiled batch size), ``chunk_size``
+    the number of decode steps between scheduling decisions.  Larger
+    chunks amortize host work; smaller chunks admit/retire sooner.
+    """
+
+    def __init__(self, engine: Engine, *, n_slots: int,
+                 chunk_size: int = 8, eos_id: Optional[int] = None):
+        if engine.cfg.family != "transformer":
+            raise ValueError(
+                "continuous batching needs per-row decode positions, "
+                "which only the transformer family provides (got family="
+                f"{engine.cfg.family!r}); hymba/rwkv/whisper decode at a "
+                "shared absolute position")
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.engine = engine
+        self.n_slots = int(n_slots)
+        self.chunk_size = int(chunk_size)
+        self.eos_id = eos_id
+        fam = get_family(engine.cfg)
+        self.cache = fam.init_cache(engine.cfg, self.n_slots,
+                                    engine.max_len)
+        self._slots: list = [None] * self.n_slots
+        self._queue: deque = deque()
+        self._cur_tok = np.zeros((self.n_slots,), np.int32)
+        self._frontier = 0             # host mirror of cache["len"]
+        self._next_rid = 0
+        self.steps_run = 0             # decode steps executed (sim clock)
+        self.n_chunks = 0
+        self.n_admitted = 0
+        self.n_retired = 0
+        # cache-surgery ops, jitted once (shapes are fixed by the pool)
+        self._reset = jax.jit(kvc.reset_slots)
+        self._compact = jax.jit(lambda c, t: kvc.compact(c, t))
+        self._adopt = jax.jit(kvc.adopt_row)
+
+    # ------------------------------------------------------------------
+    # queue
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int, *,
+               eos_id: Optional[int] = None) -> int:
+        """Enqueue a request; returns its request id.
+
+        Raises up front if the request could never fit: a row may need
+        ``prompt + max_new - 1`` cache slots plus a full chunk of
+        frontier headroom (a row can overshoot its stopping point by up
+        to ``chunk_size - 1`` steps before retirement is detected).
+        """
+        prompt = [int(t) for t in prompt]
+        max_new_tokens = int(max_new_tokens)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new_tokens}")
+        need = len(prompt) + max_new_tokens - 1 + self.chunk_size
+        if need > self.engine.max_len:
+            raise ValueError(
+                f"request needs up to {need} cache slots (prompt "
+                f"{len(prompt)} + {max_new_tokens} new + chunk "
+                f"{self.chunk_size} headroom) > engine max_len "
+                f"{self.engine.max_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid=rid, prompt=prompt,
+                                   max_new_tokens=max_new_tokens,
+                                   eos_id=self.eos_id if eos_id is None
+                                   else eos_id,
+                                   arrival_step=self.steps_run))
+        return rid
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(
+            s is not None for s in self._slots)
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for s in self._slots if s is not None and not s.done)
+
+    # ------------------------------------------------------------------
+    # scheduling round
+    # ------------------------------------------------------------------
+
+    def _set_frontier(self, target: int):
+        if target != self._frontier:
+            self.cache = self._compact(self.cache, jnp.int32(target))
+            self._frontier = int(target)
+
+    def _admit(self):
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        while self._queue and free:
+            req = self._queue.popleft()
+            row = free.pop(0)
+            plen = len(req.prompt)
+            # batch-1 prefill: the same jitted path (and therefore the
+            # same KV bytes) an isolated Engine.generate would run
+            row_cache, logits, _ = self.engine.prefill([req.prompt])
+            tok0, self.engine._key = sample_token(
+                logits, self.engine._key, self.engine.temperature)
+            tok0 = int(np.asarray(tok0)[0])
+            if plen > self._frontier:      # long prompt: raise the frontier
+                self._set_frontier(plen)
+            self.cache = self._adopt(self.cache, row_cache,
+                                     jnp.int32(row))
+            slot = _Slot(req=req, emitted=[tok0],
+                         admitted_step=self.steps_run)
+            # a request can finish on its very first (prefill) token
+            if tok0 == req.eos_id or req.max_new_tokens == 1:
+                slot.done = True
+            self._slots[row] = slot
+            self._cur_tok[row] = tok0
+            self.n_admitted += 1
+
+    def _retire(self):
+        done_mask = np.zeros((self.n_slots,), bool)
+        completions = []
+        for i, slot in enumerate(self._slots):
+            if slot is None or not slot.done:
+                continue
+            done_mask[i] = True
+            req = slot.req
+            completions.append(Completion(
+                rid=req.rid, prompt_len=len(req.prompt),
+                tokens=np.asarray(slot.emitted, np.int32),
+                arrival_step=req.arrival_step,
+                admitted_step=slot.admitted_step,
+                finished_step=self.steps_run))
+            self._slots[i] = None
+            self.n_retired += 1
+        if done_mask.any():
+            self.cache = self._reset(self.cache, jnp.asarray(done_mask))
+        return completions
+
+    def step(self):
+        """One scheduling round; returns the requests completed in it."""
+        self._admit()
+        active = np.array(
+            [s is not None and not s.done for s in self._slots], bool)
+        if not active.any():
+            # admissions can complete instantly (EOS on the prefill
+            # token); surface those without burning a decode chunk
+            return self._retire()
+
+        if self._frontier + self.chunk_size > self.engine.max_len:
+            # reclaim headroom freed by retirements / short rows
+            target = max(s.lens for s in self._slots
+                         if s is not None and not s.done)
+            self._set_frontier(target)
+
+        self.cache, toks = self.engine.decode_chunk(
+            self.cache, self._cur_tok, self.chunk_size,
+            active=jnp.asarray(active))
+        toks = np.asarray(toks)
+        self._frontier += self.chunk_size     # mirror of cache["len"]
+        self.steps_run += self.chunk_size
+        self.n_chunks += 1
+
+        for i in np.nonzero(active)[0]:
+            slot = self._slots[i]
+            req = slot.req
+            for t in toks[i]:
+                slot.emitted.append(int(t))
+                if int(t) == req.eos_id or \
+                        len(slot.emitted) >= req.max_new_tokens:
+                    slot.done = True
+                    break
+            self._cur_tok[i] = toks[i, -1]
+        return self._retire()
+
+    def run(self, max_rounds: Optional[int] = None):
+        """Drain queue + slots; returns ``{rid: Completion}``."""
+        out = {}
+        rounds = 0
+        while self.has_work:
+            if max_rounds is not None and rounds >= max_rounds:
+                raise RuntimeError(
+                    f"scheduler did not drain in {max_rounds} rounds "
+                    f"({len(self._queue)} queued, {self.n_active} active)")
+            for c in self.step():
+                out[c.rid] = c
+            rounds += 1
+        return out

@@ -252,6 +252,58 @@ def test_scan_decode_64_steps_matches_stepwise_in_one_compiled_call():
     assert step_calls["n"] == 63, step_calls
 
 
+def test_decode_chunk_concatenation_matches_one_scan():
+    """Two 4-step decode chunks seeded from the prefill token must emit
+    exactly what generate's single 9-token scan emits — the equivalence
+    the continuous-batching scheduler is built on."""
+    cfg = _dense_cfg()
+    params = _params(cfg, seed=11)
+    rng = np.random.default_rng(11)
+    prompts = rng.integers(1, cfg.vocab, (2, 6))
+
+    eng = Engine(cfg, params, max_len=24, seed=0)
+    ref = eng.generate(prompts, 9).tokens                # tok0 + 8 decoded
+
+    eng2 = Engine(cfg, params, max_len=24, seed=0)
+    cache, logits, _ = eng2.prefill(prompts)
+    tok0 = np.asarray(jnp.argmax(logits, -1), np.int32)
+    cache, c1 = eng2.decode_chunk(cache, tok0, 4)
+    cache, c2 = eng2.decode_chunk(cache, np.asarray(c1)[:, -1], 4)
+    got = np.concatenate([tok0[:, None], np.asarray(c1),
+                          np.asarray(c2)], axis=1)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_decode_chunk_active_mask_freezes_inactive_lens():
+    """Inactive rows ride along in the batch but their ``lens`` metadata
+    must not advance (otherwise empty slots pin the compaction frontier)."""
+    cfg = _dense_cfg()
+    params = _params(cfg, seed=12)
+    rng = np.random.default_rng(12)
+    prompts = rng.integers(1, cfg.vocab, (2, 5))
+    eng = Engine(cfg, params, max_len=24, seed=0)
+    cache, logits, _ = eng.prefill(prompts)
+    tok0 = np.asarray(jnp.argmax(logits, -1), np.int32)
+    cache, _ = eng.decode_chunk(cache, tok0, 3,
+                                active=np.array([True, False]))
+    assert np.asarray(cache["lens"]).tolist() == [8, 5]
+    assert int(cache["len"]) == 8        # the shared frontier still moves
+
+
+def test_decode_chunk_refuses_to_run_past_max_len():
+    """A chunk that would push the frontier past max_len must raise —
+    the traced in-chunk writes would otherwise be silently dropped."""
+    cfg = _dense_cfg()
+    params = _params(cfg, seed=13)
+    rng = np.random.default_rng(13)
+    eng = Engine(cfg, params, max_len=12, seed=0)
+    cache, logits, _ = eng.prefill(rng.integers(1, cfg.vocab, (1, 6)))
+    tok0 = np.asarray(jnp.argmax(logits, -1), np.int32)
+    cache, _ = eng.decode_chunk(cache, tok0, 6)       # 6 + 6 = 12 fits
+    with pytest.raises(ValueError, match="max_len"):
+        eng.decode_chunk(cache, tok0, 1)              # 13 > 12
+
+
 def test_ragged_batch_matches_singleton_generations():
     """Unequal-length prompts share one batch (left-padding + masks) and
     generate the same tokens as each prompt alone."""

@@ -1,0 +1,70 @@
+"""Hypothesis property tests for ``runtime.engine.sample_token``.
+
+Pins the sampling contract the serving stack is built on: determinism
+for a fixed key, greedy agreement in the temperature -> 0+ limit, and
+in-vocab token ids for every temperature.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt); skipping instead of aborting collection")
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.engine import sample_token
+
+
+def _logits(seed, b, v, unique_max=False):
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((b, v)).astype(np.float32)
+    if unique_max:
+        # a >= 1.0 gap to the runner-up, so temperature -> 0+ must land
+        # on the argmax with probability indistinguishable from 1
+        peak = rng.integers(0, v, size=b)
+        logits[np.arange(b), peak] = logits.max(axis=1) + 1.0
+    return jnp.asarray(logits)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), temp=st.floats(0.05, 4.0),
+       b=st.integers(1, 4), v=st.integers(2, 32))
+def test_same_key_same_temperature_is_deterministic(seed, temp, b, v):
+    logits = _logits(seed, b, v)
+    key = jax.random.PRNGKey(seed % 9973)
+    t1, k1 = sample_token(logits, key, temp)
+    t2, k2 = sample_token(logits, key, temp)
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), b=st.integers(1, 4),
+       v=st.integers(2, 32))
+def test_temperature_to_zero_limit_is_greedy(seed, b, v):
+    """temperature -> 0+ must agree with the greedy (temperature == 0)
+    argmax path, and greedy must consume no randomness (key unchanged)."""
+    logits = _logits(seed, b, v, unique_max=True)
+    key = jax.random.PRNGKey(seed % 9973)
+    greedy, kg = sample_token(logits, key, 0.0)
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.argmax(np.asarray(logits), -1))
+    np.testing.assert_array_equal(np.asarray(kg), np.asarray(key))
+    tiny, _ = sample_token(logits, key, 1e-6)
+    np.testing.assert_array_equal(np.asarray(tiny), np.asarray(greedy))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       temp=st.one_of(st.just(0.0), st.floats(0.05, 8.0)),
+       b=st.integers(1, 4), v=st.integers(2, 32))
+def test_sampled_ids_always_in_vocab(seed, temp, b, v):
+    logits = _logits(seed, b, v)
+    tok, _ = sample_token(logits, jax.random.PRNGKey(seed % 9973), temp)
+    t = np.asarray(tok)
+    assert t.shape == (b,) and t.dtype == np.int32
+    assert ((t >= 0) & (t < v)).all()

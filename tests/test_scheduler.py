@@ -1,0 +1,239 @@
+"""Continuous-batching scheduler regression tests.
+
+The load-bearing invariant: a request scheduled into a slot pool —
+admitted mid-stream at an arbitrary shared frontier, compacted around,
+and retired early — must emit the BYTE-IDENTICAL token stream it would
+emit alone through ``Engine.generate``.  Pinned on all three transformer
+attention lanes (dense, MLA, sliding-window ring buffer), plus the cache
+surgery ops (``reset_slots`` / ``compact`` / ``adopt_row``) and the
+one-dispatch-per-chunk property that keeps admissions recompile-free.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.compress import kvcache as kvc
+from repro.models import get_family
+from repro.models import transformer as T
+from repro.runtime.engine import Engine
+from repro.runtime.scheduler import Scheduler
+
+
+def _cfg(lane):
+    if lane == "mla":
+        return configs.get_config("minicpm3-4b").reduced(
+            compute_dtype="float32")
+    cfg = configs.get_config("phi3-medium-14b").reduced(
+        compute_dtype="float32")
+    if lane == "window":
+        cfg = dataclasses.replace(cfg, sliding_window=8, attn_chunk_kv=8)
+    return cfg
+
+
+def _params(cfg, seed=0):
+    return get_family(cfg).init_params(jax.random.PRNGKey(seed), cfg)
+
+
+# ---------------------------------------------------------------------------
+# token identity: continuous batch == isolated generation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lane", ["dense", "mla", "window"])
+def test_token_identity_with_midstream_admissions(lane):
+    """Six requests through a two-slot pool (so admissions/retirements
+    interleave with live decodes, and retired slots are recycled) must
+    reproduce each request's isolated greedy stream byte for byte."""
+    cfg = _cfg(lane)
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    plens = [5, 9, 3, 7, 4, 6]
+    gens = [4, 8, 4, 8, 4, 8]
+    prompts = [rng.integers(1, cfg.vocab, n).tolist() for n in plens]
+
+    ref_eng = Engine(cfg, params, max_len=32, seed=0)     # greedy: key unused
+    refs = [ref_eng.generate([p], g).tokens[0]
+            for p, g in zip(prompts, gens)]
+
+    sched = Scheduler(Engine(cfg, params, max_len=32, seed=0),
+                      n_slots=2, chunk_size=4)
+    rids = [sched.submit(p, g) for p, g in zip(prompts, gens)]
+    done = sched.run(max_rounds=100)
+
+    assert sched.n_admitted == 6 and sched.n_retired == 6
+    for rid, ref, g in zip(rids, refs, gens):
+        got = done[rid].tokens
+        assert got.shape == (g,)
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_token_identity_under_forced_compaction():
+    """A max_len tight enough that the shared frontier must be pulled
+    back between chunks (retired long rows unpin it) — identity must
+    survive the cache rolls."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(4)
+    plens = [5, 9, 3, 7, 4, 6]
+    gens = [6, 12, 4, 9, 5, 7]
+    prompts = [rng.integers(1, cfg.vocab, n).tolist() for n in plens]
+    ref_eng = Engine(cfg, params, max_len=24, seed=0)
+    refs = [ref_eng.generate([p], g).tokens[0]
+            for p, g in zip(prompts, gens)]
+
+    sched = Scheduler(Engine(cfg, params, max_len=24, seed=0),
+                      n_slots=3, chunk_size=4)
+    rids = [sched.submit(p, g) for p, g in zip(prompts, gens)]
+    done = sched.run(max_rounds=100)
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(done[rid].tokens, ref)
+
+
+def test_eos_stops_early_and_frees_the_slot():
+    """Submitting with eos_id = the request's own 3rd greedy token must
+    truncate the stream there and retire the slot for the next request."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(1, cfg.vocab, 6).tolist()
+    ref = Engine(cfg, params, max_len=32, seed=0).generate([prompt], 8)
+    eos = int(ref.tokens[0][2])
+
+    sched = Scheduler(Engine(cfg, params, max_len=32, seed=0),
+                      n_slots=1, chunk_size=4)
+    rid = sched.submit(prompt, 8, eos_id=eos)
+    rid2 = sched.submit(prompt, 8)            # queued behind the 1-slot pool
+    done = sched.run(max_rounds=50)
+    np.testing.assert_array_equal(done[rid].tokens, ref.tokens[0][:3])
+    np.testing.assert_array_equal(done[rid2].tokens, ref.tokens[0])
+    assert done[rid2].admitted_step >= done[rid].finished_step
+
+
+# ---------------------------------------------------------------------------
+# one compiled dispatch per decode chunk
+# ---------------------------------------------------------------------------
+
+def test_each_chunk_is_one_compiled_dispatch():
+    """Admissions and retirements between chunks must never change the
+    compiled computation: the whole run reuses ONE chunk callable, called
+    exactly once per scheduling round that decodes."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(1, cfg.vocab, n).tolist() for n in [4, 6, 5]]
+
+    eng = Engine(cfg, params, max_len=32, seed=0)
+    calls = {"n": 0}
+    real = eng._chunk_fn(4)
+
+    def counted(*a):
+        calls["n"] += 1
+        return real(*a)
+
+    eng._decode_jit[("chunk", 4)] = counted
+    sched = Scheduler(eng, n_slots=2, chunk_size=4)
+    for p in prompts:
+        sched.submit(p, 6)
+    sched.run(max_rounds=50)
+    assert calls["n"] == sched.n_chunks > 0
+    assert ("chunk", 4) in eng._decode_jit and \
+        eng._decode_jit[("chunk", 4)] is counted, \
+        "scheduler must reuse the cached chunk callable across admissions"
+
+
+# ---------------------------------------------------------------------------
+# cache surgery ops
+# ---------------------------------------------------------------------------
+
+def _prefill_cache(cfg, params, rng, b, s, ml):
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, (b, s)), jnp.int32)
+    cache, logits = T.prefill(params, tokens, cfg, max_len=ml)
+    return cache, logits
+
+
+@pytest.mark.parametrize("lane", ["dense", "window"])
+def test_compact_preserves_decode_logits(lane):
+    """Rolling the frontier back and forth must not change what decode
+    sees: logits after compaction == logits without it (both layouts)."""
+    cfg = _cfg(lane)
+    params = _params(cfg, seed=1)
+    rng = np.random.default_rng(7)
+    cache, logits = _prefill_cache(cfg, params, rng, 2, 10, 24)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    ref_logits, _ = T.decode_step(params, cache, tok, cfg)
+
+    grown = kvc.compact(cache, target_len=17)     # push frontier up
+    assert int(grown["len"]) == 17
+    back = kvc.compact(grown)                     # default: max(lens) = 10
+    assert int(back["len"]) == 10
+    got_logits, _ = T.decode_step(params, back, tok, cfg)
+    np.testing.assert_allclose(np.asarray(got_logits),
+                               np.asarray(ref_logits), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_compact_rejects_target_beyond_max_len():
+    cfg = _cfg("dense")
+    params = _params(cfg, seed=1)
+    cache, _ = _prefill_cache(cfg, params, np.random.default_rng(8),
+                              1, 6, 16)
+    with pytest.raises(ValueError, match="max_len"):
+        kvc.compact(cache, target_len=17)
+
+
+def test_reset_slots_zeroes_rows_and_lens():
+    cfg = _cfg("dense")
+    params = _params(cfg, seed=1)
+    cache, _ = _prefill_cache(cfg, params, np.random.default_rng(9),
+                              3, 8, 16)
+    out = kvc.reset_slots(cache, jnp.asarray([True, False, True]))
+    assert np.asarray(out["lens"]).tolist() == [0, 8, 0]
+    assert int(np.abs(np.asarray(out["k"][:, 0])).sum()) == 0
+    assert int(np.abs(np.asarray(out["k"][:, 2])).sum()) == 0
+    # the surviving row and the shared metadata are untouched
+    np.testing.assert_array_equal(np.asarray(out["k"][:, 1]),
+                                  np.asarray(cache["k"][:, 1]))
+    assert int(out["len"]) == int(cache["len"])
+    assert int(out["max_len"]) == int(cache["max_len"])
+
+
+def test_adopt_row_requires_frontier_headroom():
+    cfg = _cfg("dense")
+    params = _params(cfg, seed=1)
+    rng = np.random.default_rng(10)
+    pool, _ = _prefill_cache(cfg, params, rng, 2, 4, 16)
+    row, _ = _prefill_cache(cfg, params, rng, 1, 7, 16)
+    with pytest.raises(ValueError, match="frontier"):
+        kvc.adopt_row(pool, row, 0)             # 7 > pool frontier 4
+    pool = kvc.compact(pool, target_len=7)
+    out = kvc.adopt_row(pool, row, 0)
+    assert np.asarray(out["lens"]).tolist() == [7, 4]
+    assert int(out["len"]) == 7
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_scheduler_rejects_unservable_request():
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    sched = Scheduler(Engine(cfg, params, max_len=16, seed=0),
+                      n_slots=1, chunk_size=4)
+    sched.submit([1, 2, 3], 10)                 # 3 + 10 - 1 + 4 = 16 fits
+    with pytest.raises(ValueError, match="max_len"):
+        sched.submit([1, 2, 3], 11)             # 17 > 16
+    with pytest.raises(ValueError, match="empty"):
+        sched.submit([], 4)
+
+
+def test_scheduler_rejects_non_transformer_family():
+    cfg = configs.get_config("rwkv6-7b").reduced(compute_dtype="float32")
+    params = _params(cfg)
+    with pytest.raises(ValueError, match="transformer"):
+        Scheduler(Engine(cfg, params, max_len=16), n_slots=2)
