@@ -1,12 +1,50 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (harness contract).
-  python -m benchmarks.run            # all
-  python -m benchmarks.run accuracy   # one suite
+  python -m benchmarks.run              # all
+  python -m benchmarks.run accuracy     # one suite
+  python -m benchmarks.run serve --json # also write BENCH_serve.json
+
+``--json`` additionally writes one ``BENCH_<suite>.json`` per suite run:
+the same rows with the ``derived`` ``key=value`` pairs parsed into a
+dict (numbers as numbers), so the perf trajectory — serving tok/s,
+goodput, peak cache bytes — is machine-comparable across PRs.
 """
 from __future__ import annotations
 
+import json
 import sys
+
+
+def _parse_derived(derived: str) -> dict:
+    out = {}
+    for part in str(derived).split():
+        if "=" not in part:
+            out.setdefault("notes", []).append(part)
+            continue
+        k, v = part.split("=", 1)
+        num = v[:-1] if v.endswith("x") else v
+        try:
+            out[k] = int(num)
+        except ValueError:
+            try:
+                out[k] = float(num)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def _write_json(suite: str, rows) -> str:
+    path = f"BENCH_{suite}.json"
+    payload = [
+        {"name": name, "us_per_call": float(us),
+         "derived": _parse_derived(derived)}
+        for name, us, derived in rows
+    ]
+    with open(path, "w") as f:
+        json.dump({"suite": suite, "rows": payload}, f, indent=2)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -20,14 +58,20 @@ def main() -> None:
         "compression": bench_compression.run,  # beyond-paper systems wins
         "elementwise": bench_elementwise.run,  # fused PVU ops vs round-trip
         "dot": bench_dot.run,                  # §IV-E tiled quire sweep
-        "serve": bench_serve.run,              # engine prefill/decode tok/s
+        "serve": bench_serve.run,              # engine tok/s + paged cache
         "roofline": roofline.run,              # §Roofline summary
     }
-    wanted = sys.argv[1:] or list(suites)
+    args = sys.argv[1:]
+    as_json = "--json" in args
+    wanted = [a for a in args if a != "--json"] or list(suites)
     print("name,us_per_call,derived")
     for name in wanted:
-        for row in suites[name]():
+        rows = list(suites[name]())
+        for row in rows:
             print(",".join(str(x) for x in row), flush=True)
+        if as_json:
+            path = _write_json(name, rows)
+            print(f"# wrote {path}", file=sys.stderr, flush=True)
 
 
 if __name__ == "__main__":

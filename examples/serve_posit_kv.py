@@ -7,6 +7,11 @@ decodes the whole generation in one compiled ``lax.scan`` and, unlike the
 old per-step loop, never clamp-overwrites the final cache slot: every
 decode token lands in preallocated headroom.
 
+The second half A/Bs the two cache LAYOUTS on the posit16 engine: the
+dense ``batch x max_len`` preallocation versus the paged block-table
+arena (``Engine(paged=True)``), which must produce byte-identical tokens
+while only allocating the blocks the ragged prompts actually touch.
+
   PYTHONPATH=src python examples/serve_posit_kv.py
 """
 import dataclasses
@@ -27,10 +32,11 @@ from repro.runtime.engine import Engine  # noqa: E402
 PROMPT_LEN, GEN = 24, 16
 
 
-def generate(cfg, params, prompts, n_steps):
-    engine = Engine(cfg, params, max_len=PROMPT_LEN + GEN, seed=0)
+def generate(cfg, params, prompts, n_steps, **engine_kw):
+    engine = Engine(cfg, params, max_len=PROMPT_LEN + GEN, seed=0,
+                    **engine_kw)
     res = engine.generate(prompts, n_steps)
-    return res.tokens, res.cache
+    return res.tokens, res.cache, engine
 
 
 def main():
@@ -41,9 +47,9 @@ def main():
     rng = np.random.default_rng(3)
     prompts = rng.integers(1, base.vocab, (4, PROMPT_LEN))
 
-    gen_f32, cache_f32 = generate(base, params, prompts, GEN)
+    gen_f32, cache_f32, _ = generate(base, params, prompts, GEN)
     cfg_q = dataclasses.replace(base, kv_posit="posit16")
-    gen_q, cache_q = generate(cfg_q, params, prompts, GEN)
+    gen_q, cache_q, _ = generate(cfg_q, params, prompts, GEN)
 
     agree = float((gen_f32 == gen_q).mean())
     rep_f32, rep_q = cache_report(cache_f32), cache_report(cache_q)
@@ -57,6 +63,22 @@ def main():
     print("f32 cache sample   :", gen_f32[0][:10])
     print("posit16 cache sample:", gen_q[0][:10])
     assert agree > 0.9, "posit16 KV cache changed generations materially"
+
+    # dense vs paged layout on ragged prompts: identical tokens, fewer
+    # blocks resident than the dense worst case
+    ragged = [rng.integers(1, base.vocab, n).tolist()
+              for n in (PROMPT_LEN, PROMPT_LEN // 2, PROMPT_LEN // 3, 8)]
+    dense_toks, dense_cache, _ = generate(cfg_q, params, ragged, GEN)
+    paged_toks, paged_cache, eng = generate(
+        cfg_q, params, ragged, GEN, paged=True, block_size=8)
+    rep_d, rep_p = cache_report(dense_cache), cache_report(paged_cache)
+    used = eng.pool.peak_in_use
+    print(f"paged layout (block_size=8): tokens identical = "
+          f"{bool((dense_toks == paged_toks).all())}")
+    print(f"blocks in use: {used} of {eng.pool.n_blocks} worst-case "
+          f"({rep_p['bytes']:,} B arena vs {rep_d['bytes']:,} B dense)")
+    assert (dense_toks == paged_toks).all(), \
+        "paged cache layout changed the generated tokens"
     print("OK")
 
 

@@ -10,13 +10,18 @@ in the posit domain via the fused Pallas elementwise kernels
 instead of the dequantize -> f32 op -> requantize round-trip, so a cache
 rescale (attention-sink discounting, temperature folding) or a
 speculative-decoding cache merge rounds once, not twice.
+
+This module also owns the serving cache MEMORY model: the per-slot
+surgery ops for the linear/ring layouts (``reset_slots`` / ``compact`` /
+``adopt_row``) and the paged layout's ``BlockPool`` free list plus
+block-table surgery (``paged_adopt_row`` / ``paged_release_rows``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from jax import lax
+from jax import lax, tree_util
 
 from repro.core.convert import f32_to_posit, posit_to_f32
 from repro.core.tracing import is_tracer as _is_tracer
@@ -24,26 +29,97 @@ from repro.kernels import ops as kops
 from .gradient import pcfg_of, scalar_pattern
 
 
+# ---------------------------------------------------------------------------
+# Explicit cache-leaf schema (pattern vs metadata tagging)
+#
+# Caches are plain dict pytrees, so the leaf NAME is the tag: every cache
+# content leaf (K/V, latents, recurrent state — the things a posit codec
+# may have quantized to unsigned patterns) is registered in
+# ``CONTENT_LEAVES``; bookkeeping (frontiers, per-row lengths, paged block
+# tables) in ``META_LEAVES``.  The old heuristic sniffed ``unsignedinteger``
+# dtypes, which misclassifies any unsigned bookkeeping leaf (a uint block
+# table would have been "scaled" as posit patterns) and cannot distinguish
+# an f32 cache's content from metadata.  Unknown unsigned leaves now raise
+# instead of guessing.
+# ---------------------------------------------------------------------------
+
+# Time-axis / row-state content (also the cache-surgery move set below).
+_TIME_LEAVES = frozenset(
+    {"k", "v", "c_kv", "k_rope", "k_swa", "v_swa", "k_glb", "v_glb"})
+# Per-row state without a time axis (cleared on reset, copied on adopt).
+_ROW_LEAVES = frozenset({"ssm"})
+# All content: time leaves + row state + whisper cross-attention KV +
+# rwkv recurrent state.
+CONTENT_LEAVES = _TIME_LEAVES | _ROW_LEAVES | frozenset(
+    {"ck", "cv", "wkv", "tm_x", "cm_x"})
+META_LEAVES = frozenset(
+    {"len", "lens", "max_len", "length", "block_tables"})
+
+
+def _leaf_key(path):
+    for entry in reversed(path):
+        if isinstance(entry, tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, tree_util.GetAttrKey):
+            return str(entry.name)
+    return None
+
+
+def _leaf_is_patterns(path, x) -> bool:
+    key = _leaf_key(path)
+    if key is None:                 # bare array / unkeyed tree: dtype only
+        return jnp.issubdtype(x.dtype, jnp.unsignedinteger)
+    if key in CONTENT_LEAVES:
+        return jnp.issubdtype(x.dtype, jnp.unsignedinteger)
+    if key in META_LEAVES:
+        return False
+    if jnp.issubdtype(x.dtype, jnp.unsignedinteger):
+        raise ValueError(
+            f"unknown unsigned cache leaf {key!r}: register it in "
+            "kvcache.CONTENT_LEAVES (posit patterns) or "
+            "kvcache.META_LEAVES (bookkeeping); refusing to guess from "
+            "the dtype")
+    return False
+
+
+def _leaf_is_content(path, x) -> bool:
+    key = _leaf_key(path)
+    if key is None:
+        return (jnp.issubdtype(x.dtype, jnp.unsignedinteger)
+                or jnp.issubdtype(x.dtype, jnp.floating))
+    return key in CONTENT_LEAVES
+
+
 def quantize_cache(cache, name: str):
     cfg = pcfg_of(name)
 
-    def one(x):
-        if jnp.issubdtype(x.dtype, jnp.floating):
+    def one(path, x):
+        if _leaf_is_content(path, x) and \
+                jnp.issubdtype(x.dtype, jnp.floating):
             return f32_to_posit(x.astype(jnp.float32), cfg)
+        key = _leaf_key(path)
+        if key is not None and key not in META_LEAVES and \
+                key not in CONTENT_LEAVES and \
+                jnp.issubdtype(x.dtype, jnp.floating):
+            raise ValueError(
+                f"unknown float cache leaf {key!r}: register it in "
+                "kvcache.CONTENT_LEAVES (quantizable content) or "
+                "kvcache.META_LEAVES (bookkeeping); refusing to "
+                "silently skip it")
         return x                                   # lengths / ints
 
-    return jax.tree.map(one, cache)
+    return tree_util.tree_map_with_path(one, cache)
 
 
 def dequantize_cache(cache, name: str):
     cfg = pcfg_of(name)
 
-    def one(x):
-        if jnp.issubdtype(x.dtype, jnp.unsignedinteger):
+    def one(path, x):
+        if _leaf_is_patterns(path, x):
             return posit_to_f32(x, cfg)
         return x
 
-    return jax.tree.map(one, cache)
+    return tree_util.tree_map_with_path(one, cache)
 
 
 def cache_bytes(cache) -> int:
@@ -53,20 +129,21 @@ def cache_bytes(cache) -> int:
 def cache_report(cache) -> dict:
     """Actual vs f32-equivalent bytes and the compression ratio.
 
-    Posit-pattern leaves (unsigned ints) and reduced-precision float
-    leaves count 4 bytes/element in the f32 baseline; integer metadata
-    (``len``/``lens``/``max_len``) counts as-is.  Shape-agnostic, so it
-    reports ring-buffer (window-sized) caches the same way as linear
-    ones — the ratio compares storage *dtypes*, not layouts.
+    Content leaves (posit patterns or reduced-precision floats, per the
+    explicit ``CONTENT_LEAVES`` schema) count 4 bytes/element in the f32
+    baseline; bookkeeping (``len``/``lens``/``max_len``/``block_tables``)
+    counts as-is.  Shape-agnostic, so it reports ring-buffer
+    (window-sized) and paged (block-arena) caches the same way as linear
+    ones — the ratio compares storage *dtypes*, not layouts, while
+    ``bytes`` reflects the layout's actual footprint (a paged arena
+    sized below ``slots x max_len`` reports correspondingly fewer
+    bytes).
     """
-    leaves = jax.tree.leaves(cache)
-    actual = sum(x.size * x.dtype.itemsize for x in leaves)
+    leaves = tree_util.tree_leaves_with_path(cache)
+    actual = sum(x.size * x.dtype.itemsize for _, x in leaves)
     f32 = sum(
-        x.size * 4
-        if (jnp.issubdtype(x.dtype, jnp.unsignedinteger)
-            or jnp.issubdtype(x.dtype, jnp.floating))
-        else x.size * x.dtype.itemsize
-        for x in leaves)
+        x.size * 4 if _leaf_is_content(p, x) else x.size * x.dtype.itemsize
+        for p, x in leaves)
     return {"bytes": actual, "f32_bytes": f32,
             "ratio": f32 / max(actual, 1)}
 
@@ -86,13 +163,24 @@ def cache_report(cache) -> dict:
 # relabelling for ring buffers (slot = pos % T).
 # ---------------------------------------------------------------------------
 
-# Leaves with a (stack, batch, time, ...) layout that must move with the
-# write frontier; everything else either has no time axis (``ssm`` state,
-# metadata) or is not cache content.
-_TIME_LEAVES = frozenset(
-    {"k", "v", "c_kv", "k_rope", "k_swa", "v_swa", "k_glb", "v_glb"})
-# Per-row state without a time axis (cleared on reset, copied on adopt).
-_ROW_LEAVES = frozenset({"ssm"})
+# ``_TIME_LEAVES`` (defined with the leaf schema above) is the move set:
+# leaves with a (stack, batch, time, ...) layout that must travel with the
+# write frontier; ``_ROW_LEAVES`` is per-row state without a time axis.
+
+
+def is_paged(cache) -> bool:
+    """True for block-table (paged) caches; their batch rows address the
+    shared block arena through per-row tables, so the linear/ring
+    surgery ops below do not apply (see the paged section)."""
+    return isinstance(cache, dict) and "block_tables" in cache
+
+
+def _reject_paged(cache, what: str):
+    if is_paged(cache):
+        raise ValueError(
+            f"{what}: paged (block-table) caches have no shared linear "
+            "frontier to move; use paged_adopt_row / paged_release_rows "
+            "and the BlockPool instead")
 
 
 def reset_slots(cache, rows):
@@ -105,6 +193,7 @@ def reset_slots(cache, rows):
     """
     from repro.models import layers as L
 
+    _reject_paged(cache, "reset_slots")
     rows = jnp.asarray(rows, bool)
     out = dict(cache)
     for key, leaf in cache.items():
@@ -126,6 +215,7 @@ def compact(cache, target_len=None):
     """
     from repro.models import layers as L
 
+    _reject_paged(cache, "compact")
     cur = jnp.asarray(cache["len"], jnp.int32)
     target = (jnp.max(jnp.asarray(cache["lens"], jnp.int32))
               if target_len is None else jnp.asarray(target_len, jnp.int32))
@@ -153,6 +243,7 @@ def adopt_row(cache, row_cache, row):
     padded slots is free), then scattered into batch row ``row``; the
     row's ``lens`` entry takes the prompt length.
     """
+    _reject_paged(cache, "adopt_row")
     cur = cache["len"]
     src = row_cache["len"]
     if not _is_tracer(cur) and not _is_tracer(src) \
@@ -186,24 +277,22 @@ def adopt_row(cache, row_cache, row):
 # Posit-domain cache maintenance (fused elementwise kernels)
 # ---------------------------------------------------------------------------
 
-def _is_patterns(x) -> bool:
-    return jnp.issubdtype(x.dtype, jnp.unsignedinteger)
-
-
 def scale_cache(cache, factor: float, name: str, interpret: bool = True):
     """Multiply every quantized leaf by ``factor`` in the posit domain.
 
-    Non-pattern leaves (lengths, positions) pass through untouched.
+    Pattern leaves are identified by the explicit ``CONTENT_LEAVES``
+    schema (not dtype sniffing); metadata (lengths, positions, block
+    tables) passes through untouched.
     """
     cfg = pcfg_of(name)
     s = scalar_pattern(factor, cfg)
 
-    def one(x):
-        if _is_patterns(x):
+    def one(path, x):
+        if _leaf_is_patterns(path, x):
             return kops.vmul(x, s, cfg, interpret=interpret)
         return x
 
-    return jax.tree.map(one, cache)
+    return tree_util.tree_map_with_path(one, cache)
 
 
 def merge_caches(cache_a, cache_b, name: str, weight_a: float = 0.5,
@@ -226,8 +315,8 @@ def merge_caches(cache_a, cache_b, name: str, weight_a: float = 0.5,
     wa = scalar_pattern(weight_a, cfg)
     wb = scalar_pattern(1.0 - float(weight_a), cfg)
 
-    def one(a, b):
-        if _is_patterns(a) and _is_patterns(b):
+    def one(path, a, b):
+        if _leaf_is_patterns(path, a) and _leaf_is_patterns(path, b):
             return kops.vadd(kops.vmul(a, wa, cfg, interpret=interpret),
                              kops.vmul(b, wb, cfg, interpret=interpret),
                              cfg, interpret=interpret)
@@ -245,4 +334,139 @@ def merge_caches(cache_a, cache_b, name: str, weight_a: float = 0.5,
                 "K/V contents of inconsistent caches")
         return a
 
-    return jax.tree.map(one, cache_a, cache_b)
+    return tree_util.tree_map_with_path(one, cache_a, cache_b)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: a BlockPool free-list over a global arena of fixed-size
+# posit-pattern blocks, plus per-sequence block tables.
+#
+# Layout (see ``models/transformer.py`` for the model-side lanes):
+#   * arena content leaves are (L, n_blocks, block_size, ...) — one global
+#     pool of blocks shared by every batch row;
+#   * ``block_tables`` is (B, W) int32: row b's logical block i lives in
+#     physical arena block ``block_tables[b, i]``; unassigned entries hold
+#     the OUT-OF-RANGE sentinel ``n_blocks`` so a write through them is
+#     DROPPED by the scatter (the paged re-expression of the engine's
+#     never-clamp guarantee) and a gather through them clamps into masked
+#     garbage;
+#   * addressing is ROW-LOCAL: row b's token p occupies logical block
+#     ``p // block_size`` at offset ``p % block_size``.  There is no
+#     shared padded frontier (no ``len`` leaf) and therefore nothing to
+#     ``compact`` — admission just packs a prompt's KV into freshly
+#     allocated blocks, and retirement frees them back to the pool.
+#
+# The ``BlockPool`` itself is HOST state (a free list), like the
+# scheduler's frontier mirror: block ids only cross to the device inside
+# ``block_tables``.
+# ---------------------------------------------------------------------------
+
+
+class BlockPool:
+    """Host-side free list over ``n_blocks`` arena block ids.
+
+    Allocation never hands out a block twice (double-alloc and
+    double-free raise), and ``peak_in_use`` records the high-water mark
+    for capacity planning / the benchmark's peak-cache-bytes report.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
+        self.n_blocks = int(n_blocks)
+        self._free = list(range(self.n_blocks - 1, -1, -1))  # pop() -> asc
+        self._in_use: set = set()
+        self.peak_in_use = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._in_use)
+
+    def alloc(self, n: int) -> list:
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            raise MemoryError(
+                f"BlockPool exhausted: {n} blocks requested, "
+                f"{len(self._free)} free of {self.n_blocks}")
+        ids = [self._free.pop() for _ in range(n)]
+        self._in_use.update(ids)
+        self.peak_in_use = max(self.peak_in_use, len(self._in_use))
+        return ids
+
+    def free(self, ids) -> None:
+        ids = list(ids)
+        for i in ids:
+            if i not in self._in_use:
+                raise ValueError(
+                    f"BlockPool.free: block {i} is not allocated "
+                    "(double free or foreign id)")
+        for i in ids:
+            self._in_use.remove(i)
+            self._free.append(i)
+
+
+def paged_adopt_row(cache, row_cache, row, block_ids, *, window: int = 0,
+                    src_ring: bool = False):
+    """Graft a batch-1 LINEAR prefilled cache into row ``row`` of a paged
+    pool cache: the prompt's KV is scattered into the arena blocks named
+    by ``block_ids`` and the row's table/``lens`` entries take over.
+
+    ``block_ids``: (W,) int32 physical ids, unassigned entries = the
+    ``n_blocks`` sentinel (their scatter is dropped).  ``src_ring`` marks
+    a ``row_cache`` whose K/V time axis is in ring layout (a
+    sliding-window prefill longer than the window); out-of-window slots
+    the block layout covers but the ring never stored arrive as garbage
+    and stay masked, exactly as they are in the ring itself.  Unlike
+    ``adopt_row`` there is no frontier precondition: row-local
+    addressing needs no compaction.
+    """
+    from repro.models import layers as L
+
+    if not is_paged(cache):
+        raise ValueError("paged_adopt_row: pool cache is not paged "
+                         "(no block_tables leaf)")
+    row = jnp.asarray(row, jnp.int32)
+    block_ids = jnp.asarray(block_ids, jnp.int32)
+    plen = jnp.asarray(row_cache["lens"], jnp.int32)[0]
+    out = dict(cache)
+    for key, leaf in cache.items():
+        if key in _TIME_LEAVES and key in row_cache:
+            out[key] = L.paged_pack(
+                leaf, row_cache[key], block_ids[None, :], plen[None],
+                window=window, src_shift=None, src_ring=src_ring)
+    out["block_tables"] = cache["block_tables"].at[row].set(block_ids)
+    out["lens"] = jnp.asarray(cache["lens"], jnp.int32).at[row].set(plen)
+    return out
+
+
+def paged_release_rows(cache, rows):
+    """Retire paged batch rows: ``lens -> 0`` and their block-table rows
+    reset to the sentinel, so stale entries can neither be written (the
+    scatter drops sentinel targets) nor keep referencing blocks the
+    caller is about to hand back to the pool.  The arena content itself
+    is NOT wiped: freed blocks are overwritten wholesale on their next
+    allocation and masked by ``lens`` until then.  The caller owns the
+    host-side ``BlockPool.free``.
+    """
+    if not is_paged(cache):
+        raise ValueError("paged_release_rows: cache is not paged")
+    rows = jnp.asarray(rows, bool)
+    tables = cache["block_tables"]
+    sentinel = jnp.full_like(tables, _paged_sentinel(cache))
+    return dict(
+        cache,
+        block_tables=jnp.where(rows[:, None], sentinel, tables),
+        lens=jnp.where(rows, 0, jnp.asarray(cache["lens"], jnp.int32)))
+
+
+def _paged_sentinel(cache) -> int:
+    """The invalid block id (== n_blocks, from any arena leaf's shape)."""
+    for key in _TIME_LEAVES:
+        if key in cache:
+            return int(cache[key].shape[1])
+    raise ValueError("paged cache has no arena content leaves")

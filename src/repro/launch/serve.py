@@ -22,6 +22,13 @@ prints goodput and p50/p99 request latency in decode steps.
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
       --reduced --continuous --batch 4 --n-requests 16 \
       --arrival-rate 0.2 --chunk-size 8 --max-len 64
+
+``--paged`` swaps the dense ``slots x max_len`` cache for the paged
+block-table layout (``--block-size`` slots per block, ``--n-blocks``
+arena size; 0 = worst case): rows allocate blocks as they grow and free
+them at retirement, so peak cache memory tracks the tokens actually
+resident instead of the worst case, and admission never compacts.  The
+dense path stays selectable (omit ``--paged``) for A/B comparison.
 """
 from __future__ import annotations
 
@@ -76,14 +83,20 @@ def drive_trace(sched: Scheduler, trace):
     return done, order
 
 
+def _build_engine(args, cfg, params, max_len):
+    return Engine(cfg, params, max_len=max_len,
+                  temperature=args.temperature, seed=args.seed,
+                  paged=args.paged, block_size=args.block_size,
+                  n_blocks=args.n_blocks)
+
+
 def run_continuous(args, cfg, params):
     rng = np.random.default_rng(args.seed)
     # worst-case slot demand: prompt + gen - 1 cached tokens plus a full
     # chunk of frontier headroom (overshoot before retirement)
     max_len = args.max_len or (args.prompt_len + args.gen - 1 +
                                args.chunk_size)
-    engine = Engine(cfg, params, max_len=max_len,
-                    temperature=args.temperature, seed=args.seed)
+    engine = _build_engine(args, cfg, params, max_len)
     sched = Scheduler(engine, n_slots=args.batch,
                       chunk_size=args.chunk_size)
     trace = poisson_trace(rng, args.n_requests, args.arrival_rate,
@@ -106,6 +119,12 @@ def run_continuous(args, cfg, params):
     print(f"  cache: {rep['bytes']:,} bytes of {rep['f32_bytes']:,} "
           f"f32-equiv ({rep['ratio']:.2f}x, kv_posit={cfg.kv_posit}, "
           f"max_len={max_len})")
+    if args.paged:
+        print(f"  paged: {sched.n_blocks} arena blocks x "
+              f"{sched.block_size} slots (dense worst case "
+              f"{args.batch * sched.table_width}); peak in use "
+              f"{sched.pool.peak_in_use}, peak committed "
+              f"{sched.peak_committed}")
     return done
 
 
@@ -140,6 +159,14 @@ def main(argv=None):
     ap.add_argument("--chunk-size", type=int, default=8,
                     help="decode steps between scheduling rounds "
                          "(with --continuous)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged block-table KV cache (transformer "
+                         "family only); omit for the dense layout")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="cache slots per arena block (with --paged)")
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="arena size in blocks (with --paged; "
+                         "0 = worst case, never out of blocks)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch)
@@ -173,11 +200,11 @@ def main(argv=None):
             (args.batch, cfg.n_visual_tokens, cfg.d_model)), jnp.float32)
 
     max_len = args.max_len or (args.prompt_len + args.gen)
-    engine = Engine(cfg, params, max_len=max_len,
-                    temperature=args.temperature, seed=args.seed)
+    engine = _build_engine(args, cfg, params, max_len)
 
     t0 = time.time()
-    cache, logits, lens = engine.prefill(prompts, **kwargs)
+    cache, logits, lens = engine.prefill(
+        prompts, reserve_tokens=args.gen - 1, **kwargs)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
     rep = cache_report(cache)

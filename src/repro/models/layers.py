@@ -269,7 +269,7 @@ def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, cfg: ModelConfig,
                      kv_posit: Optional[str] = None, window: int = 0,
-                     start=None, ring: bool = False):
+                     start=None, ring: bool = False, apos=None):
     """Single-token decode: q (B,1,H,D); caches (B,T,G,D) possibly posit
     patterns; positions >= cache_len are masked.
 
@@ -291,6 +291,10 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, cfg: ModelConfig,
       ``pos % T``: slot ``i`` holds absolute position
       ``p - ((p - i) mod T)`` for frontier ``p = cache_len - 1``, and the
       validity/window tests run on those rotated absolute positions.
+    * ``apos`` — optional (B, T) precomputed absolute positions per cache
+      slot (the paged lanes supply these from the block-table layout);
+      overrides the linear/ring position computation, everything else —
+      masking, softmax, value reduction — is the same math.
     """
     b, _, h, d = q.shape
     t_len, g = k_cache.shape[1], k_cache.shape[2]
@@ -320,7 +324,9 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, cfg: ModelConfig,
     cl = jnp.broadcast_to(cl, (b,)) if cl.ndim == 0 else cl
     st = jnp.asarray(0 if start is None else start, jnp.int32)
     st = jnp.broadcast_to(st, (b,)) if st.ndim == 0 else st
-    if ring:
+    if apos is not None:
+        apos = jnp.asarray(apos, jnp.int32)
+    elif ring:
         p = (cl - 1)[:, None]                               # write frontier
         apos = p - lax.rem(p - t_pos[None, :], t_len)       # (B,T) absolute
     else:
@@ -417,6 +423,146 @@ def pad_cache_time(kv, t: int):
     pad = [(0, 0)] * kv.ndim
     pad[2] = (0, t - s)
     return jnp.pad(kv, pad)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache primitives (block arenas + per-row block tables)
+#
+# Layout contract (shared with ``compress/kvcache.py`` and the transformer
+# paged lanes): arena leaves are (n_blocks, block_size, ...) per layer —
+# (L, n_blocks, block_size, ...) stacked — and ``block_tables`` is (B, W)
+# int32 with the OUT-OF-RANGE sentinel ``n_blocks`` in unassigned entries.
+# Addressing is ROW-LOCAL: row b's token p lives in logical block
+# ``p // block_size`` at offset ``p % block_size``.
+#
+# Two mappings from logical block to table slot:
+#   * dense/MLA lane: identity — table slot i IS logical block i
+#     (W = ceil(max_len / block_size));
+#   * sliding-window lane: a RING over table slots — logical block q maps
+#     to slot ``q % W`` with ``W = ceil(window / block_size) + 1``, so a
+#     block falling out of the window is recycled in place (the paged
+#     re-expression of the ring buffer).  The +1 spare block guarantees
+#     every partially-overwritten block's stale half is already outside
+#     the window, so masking stale slots as "future" is exact.
+# ---------------------------------------------------------------------------
+
+
+def paged_window_blocks(window: int, block_size: int) -> int:
+    """Table width of the sliding-window block ring."""
+    return -(-window // block_size) + 1
+
+
+def paged_is_window_lane(window: int, block_size: int,
+                         table_width: int) -> bool:
+    """Static lane rule, derivable on both the host (which sizes tables)
+    and inside jit (from the table's shape): a paged cache runs the
+    block-ring mapping iff its table width equals the window ring's.
+    When the dense width coincides the two mappings agree everywhere the
+    frontier can reach, so the ambiguity is harmless."""
+    return bool(window) and table_width == paged_window_blocks(
+        window, block_size)
+
+
+def paged_positions(frontier, table_width: int, block_size: int, *,
+                    window: int = 0):
+    """(B,) per-row frontier (last-written position) -> (B, W*bs) absolute
+    position of every virtual slot of the gathered paged cache.
+
+    Dense lane: identity.  Window lane: table slot s holds logical block
+    ``lb = pb - ((pb - s) mod W)`` for frontier block ``pb``; slots ahead
+    of the frontier (or before position 0) get out-of-range positions the
+    caller's validity mask excludes — including the stale tail of the
+    frontier's own block, whose true (previous-epoch) content is already
+    outside the window.
+    """
+    w, bs = table_width, block_size
+    frontier = jnp.asarray(frontier, jnp.int32)
+    b = frontier.shape[0]
+    offs = jnp.arange(bs, dtype=jnp.int32)
+    if paged_is_window_lane(window, bs, w):
+        pb = frontier[:, None] // bs                      # (B, 1)
+        sblk = jnp.arange(w, dtype=jnp.int32)[None, :]
+        lb = pb - lax.rem(pb - sblk, w)                   # (B, W)
+        apos = lb[:, :, None] * bs + offs[None, None, :]
+    else:
+        blk = jnp.arange(w, dtype=jnp.int32)
+        apos = (blk[:, None] * bs + offs[None, :])[None]
+        apos = jnp.broadcast_to(apos, (b, w, bs))
+    return apos.reshape(b, w * bs)
+
+
+def paged_gather(arena, tables):
+    """arena (n_blocks, bs, ...) + tables (B, W) -> the row-contiguous
+    virtual cache (B, W*bs, ...).  Sentinel entries clamp into an
+    arbitrary real block; the positions from ``paged_positions`` (or a
+    row-local ``lens`` mask) exclude whatever they alias."""
+    nb, bs = arena.shape[0], arena.shape[1]
+    b, w = tables.shape
+    g = jnp.take(arena, jnp.clip(tables, 0, nb - 1), axis=0)
+    return g.reshape((b, w * bs) + arena.shape[2:])
+
+
+def paged_cache_update(arena, upd, tables, pos, ok, *, window: int = 0):
+    """Scatter one new KV vector per row into its block: row b writes
+    ``upd[b]`` at logical position ``pos[b]``.
+
+    The paged guarded write: rows with ``ok=False`` (inactive scheduler
+    slots, out-of-capacity positions) and writes through sentinel table
+    entries are DROPPED — never clamped onto someone else's block.
+    ``upd``: (B, ...) matching the arena's per-slot trailing dims.
+    """
+    nb, bs = arena.shape[0], arena.shape[1]
+    w = tables.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    blk = pos // bs
+    if paged_is_window_lane(window, bs, w):
+        slot = lax.rem(blk, w)
+    else:
+        slot = blk
+        ok = ok & (blk < w)
+    phys = jnp.take_along_axis(
+        tables, jnp.clip(slot, 0, w - 1)[:, None], axis=1)[:, 0]
+    phys = jnp.where(ok, phys, nb)              # sentinel: scatter drops
+    return arena.at[phys, lax.rem(pos, bs)].set(upd, mode="drop")
+
+
+def paged_pack(arena, kvs, tables, lens, *, window: int = 0,
+               src_shift=None, src_ring: bool = False):
+    """Pack prompt KV (L, B, S, ...) into arena blocks (L, nb, bs, ...).
+
+    Row b's content positions ``0..lens[b]-1`` land in the blocks named
+    by ``tables[b]`` (sentinel entries drop their scatter — unallocated
+    table tails carry garbage that never reaches the arena).  ``src_shift``
+    (B,) gives the time-axis index of each row's content start in ``kvs``
+    (``S - lens`` for the engine's LEFT-padded prompt batches; default 0
+    for batch-1 right-padded caches); ``src_ring`` instead reads a
+    ring-layout source at ``pos % S``.  Window-lane tables pack only the
+    ring's block span; slots whose positions precede the prompt (or fall
+    out of the window) receive garbage that the attention masks exclude,
+    exactly as the linear ring does.
+    """
+    nb, bs = arena.shape[1], arena.shape[2]
+    b, s = kvs.shape[1], kvs.shape[2]
+    w = tables.shape[1]
+    lens = jnp.asarray(lens, jnp.int32)
+    # the SAME slot->position mapping decode attention will use, with
+    # the prompt's last token as the frontier (one shared definition of
+    # the block-ring relabelling, so prefill and decode cannot skew)
+    cpos = paged_positions(jnp.maximum(lens - 1, 0), w, bs,
+                           window=window).reshape(b, w, bs)
+    if src_ring:
+        tpos = lax.rem(cpos, s)
+    elif src_shift is not None:
+        tpos = cpos + jnp.asarray(src_shift, jnp.int32)[:, None, None]
+    else:
+        tpos = cpos
+    tpos = jnp.clip(tpos, 0, s - 1).reshape(b, w * bs)
+    idx = tpos.reshape((1, b, w * bs) + (1,) * (kvs.ndim - 3))
+    gathered = jnp.take_along_axis(kvs, idx, axis=2)        # (L,B,W*bs,..)
+    blocks = gathered.reshape(
+        (kvs.shape[0], b * w, bs) + kvs.shape[3:])
+    ids = jnp.asarray(tables, jnp.int32).reshape(-1)
+    return arena.at[:, ids].set(blocks, mode="drop")
 
 
 # ---------------------------------------------------------------------------

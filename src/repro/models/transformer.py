@@ -303,6 +303,54 @@ def _maybe_quant_kv(x, cfg: ModelConfig):
     return x.astype(L.cdtype(cfg))
 
 
+# ---------------------------------------------------------------------------
+# Paged cache lane: block arena + per-row block tables (row-LOCAL
+# addressing, so there is no shared padded frontier and nothing to
+# compact; see models/layers.py for the layout contract).
+# ---------------------------------------------------------------------------
+
+def paged_table_width(cfg: ModelConfig, block_size: int,
+                      max_len: int) -> int:
+    """Block-table width W: the window ring's ``ceil(window/bs)+1`` when
+    a sliding window is active and strictly smaller than the dense
+    ``ceil(max_len/bs)``; the dense width otherwise (MLA has no
+    window)."""
+    dense = -(-int(max_len) // int(block_size))
+    if cfg.sliding_window and not cfg.mla:
+        ring = L.paged_window_blocks(cfg.sliding_window, block_size)
+        if ring < dense:
+            return ring
+    return dense
+
+
+def _paged_window(cfg: ModelConfig) -> int:
+    return 0 if cfg.mla else (cfg.sliding_window or 0)
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     block_size: int, n_blocks: int):
+    """Empty paged pool cache: zeroed arenas, sentinel block tables
+    (entries == ``n_blocks``, so writes drop), ``lens`` all zero."""
+    w = paged_table_width(cfg, block_size, max_len)
+    meta = {
+        "block_tables": jnp.full((batch, w), n_blocks, jnp.int32),
+        "lens": jnp.zeros((batch,), jnp.int32),
+        "max_len": jnp.asarray(max_len, jnp.int32),
+    }
+    dt = _cache_dtype(cfg)
+    if cfg.mla:
+        return {
+            "c_kv": jnp.zeros(
+                (cfg.n_layers, n_blocks, block_size, cfg.kv_lora_rank), dt),
+            "k_rope": jnp.zeros(
+                (cfg.n_layers, n_blocks, block_size, cfg.qk_rope_dim), dt),
+            **meta,
+        }
+    shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt), **meta}
+
+
 def _is_ring(cfg: ModelConfig, capacity: int) -> bool:
     """Window-sized caches run as ring buffers; full-length caches (the
     reference layout, or window >= max_len) stay linear.  When capacity
@@ -324,7 +372,8 @@ def _ring_pack(kv, w: int):
 
 
 def prefill(params, tokens, cfg: ModelConfig, visual=None, *,
-            max_len=None, prompt_lens=None, window_ring: bool = True):
+            max_len=None, prompt_lens=None, window_ring: bool = True,
+            block_size: int = 0, n_blocks: int = 0, block_tables=None):
     """Run the full prompt, return (cache, logits at the last position).
 
     ``max_len`` preallocates decode headroom (default: no headroom, the
@@ -335,6 +384,13 @@ def prefill(params, tokens, cfg: ModelConfig, visual=None, *,
     LEFT-padded to a common length, row b's real tokens occupy the last
     ``prompt_lens[b]`` slots, get RoPE positions 0..len-1, and pad keys
     are masked out of attention for that row only.
+
+    ``block_tables`` (B, W) switches on the PAGED lane: instead of a
+    dense (B, max_len) cache, each row's KV is packed into the arena
+    blocks its table names (``block_size``/``n_blocks`` size the arena;
+    unassigned = sentinel ``n_blocks``, whose scatter is dropped).  The
+    KV *values* are identical to the linear lane's — only the storage
+    layout changes.
     """
     b, s = tokens.shape
     ml = s if max_len is None else int(max_len)
@@ -359,6 +415,20 @@ def prefill(params, tokens, cfg: ModelConfig, visual=None, *,
     x = L.rms_norm(params["final_norm"], x, cfg)
     last = x[:, -1:, :]
     logits = (last @ _unembed_weight(params, cfg).astype(x.dtype))
+    logits = logits[:, 0, :].astype(jnp.float32)
+
+    if block_tables is not None:
+        tables = jnp.asarray(block_tables, jnp.int32)
+        empty = init_paged_cache(cfg, b, ml, int(block_size),
+                                 int(n_blocks))
+        cache = dict(empty, block_tables=tables, lens=lens)
+        shift = (s - lens) if prompt_lens is not None else None
+        keys = ("c_kv", "k_rope") if cfg.mla else ("k", "v")
+        for key, kv in zip(keys, kvs):
+            cache[key] = L.paged_pack(
+                cache[key], kv, tables, lens,
+                window=_paged_window(cfg), src_shift=shift)
+        return cache, logits
 
     meta = _cache_meta(b, s, ml, lens)
     if cfg.mla:
@@ -369,7 +439,7 @@ def prefill(params, tokens, cfg: ModelConfig, visual=None, *,
         cap = min(ml, window) if (window and window_ring) else ml
         pack = _ring_pack if s > cap else _pad_time
         cache = {"k": pack(kvs[0], cap), "v": pack(kvs[1], cap), **meta}
-    return cache, logits[:, 0, :].astype(jnp.float32)
+    return cache, logits
 
 
 def _decode_attn_dense(p, x, k_cache, v_cache, pos, lens, cfg: ModelConfig):
@@ -445,6 +515,149 @@ def _decode_attn_mla(p, x, c_cache, r_cache, pos, lens, cfg: ModelConfig):
     return L.dense(p["wo"], out, cfg), c_cache, r_cache
 
 
+def _decode_attn_dense_paged(p, x, k_arena, v_arena, tables, lens, ok,
+                             cfg: ModelConfig):
+    """Paged dense/GQA decode: per-row write position ``lens[b]`` into the
+    row's block, then attention over the gathered virtual cache.  The
+    same projections, RoPE positions (content-relative ``lens``) and
+    softmax math as the linear lane — only the storage addressing
+    differs, so the scores over valid positions are identical."""
+    b = x.shape[0]
+    bs = k_arena.shape[1]
+    w = tables.shape[1]
+    window = _paged_window(cfg)
+    q = L.dense(p["wq"], x, cfg).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x, cfg).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], x, cfg).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+    q = L.apply_rope(q, lens[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, lens[:, None], cfg.rope_theta)
+
+    k_arena = L.paged_cache_update(
+        k_arena, _maybe_quant_kv(k, cfg)[:, 0], tables, lens, ok,
+        window=window)
+    v_arena = L.paged_cache_update(
+        v_arena, _maybe_quant_kv(v, cfg)[:, 0], tables, lens, ok,
+        window=window)
+    ks = L.paged_gather(k_arena, tables)
+    vs = L.paged_gather(v_arena, tables)
+    apos = L.paged_positions(lens, w, bs, window=window)
+    out = L.decode_attention(
+        q, ks, vs, lens + 1, cfg=cfg, kv_posit=cfg.kv_posit,
+        window=window, start=None, apos=apos)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    return L.dense(p["wo"], out, cfg), k_arena, v_arena
+
+
+def _decode_attn_mla_paged(p, x, c_arena, r_arena, tables, lens, ok,
+                           cfg: ModelConfig):
+    """Paged absorbed-matrix MLA decode (row-local positions)."""
+    b = x.shape[0]
+    bs = c_arena.shape[1]
+    w = tables.shape[1]
+    q_lat = L.rms_norm(p["q_norm"], L.dense(p["wdq"], x, cfg), cfg)
+    q = L.dense(p["wuq"], q_lat, cfg).reshape(
+        b, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope[:, None], lens[:, None],
+                          cfg.rope_theta)[:, 0]
+
+    dkv = L.dense(p["wdkv"], x, cfg)                      # (B,1,rank+rope)
+    c_new, r_new = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+    c_new = L.rms_norm(p["kv_norm"], c_new, cfg)
+    r_new = L.apply_rope(r_new[:, :, None, :], lens[:, None],
+                         cfg.rope_theta)[:, :, 0, :]
+    c_arena = L.paged_cache_update(
+        c_arena, _maybe_quant_kv(c_new, cfg)[:, 0], tables, lens, ok)
+    r_arena = L.paged_cache_update(
+        r_arena, _maybe_quant_kv(r_new, cfg)[:, 0], tables, lens, ok)
+
+    c = L.paged_gather(c_arena, tables)                   # (B, W*bs, rank)
+    r = L.paged_gather(r_arena, tables)
+    if cfg.kv_posit:
+        from repro.core.convert import posit_to_f32
+        c = posit_to_f32(c, L.pcfg(cfg.kv_posit))
+        r = posit_to_f32(r, L.pcfg(cfg.kv_posit))
+    c = c.astype(jnp.float32)
+    r = r.astype(jnp.float32)
+
+    wuk = L.maybe_dequant(p["wuk"]["w"], cfg).reshape(
+        cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_dim)
+    q_lat_eff = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32), wuk)
+    scores = jnp.einsum("bhr,btr->bht", q_lat_eff, c)
+    scores += jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32), r)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    t_pos = jnp.arange(w * bs)
+    valid = t_pos[None, :] <= lens[:, None]               # content [0,lens]
+    scores = jnp.where(valid[:, None, :], scores * scale, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bht,btr->bhr", probs, c)        # (B,H,rank)
+    wuv = L.maybe_dequant(p["wuv"]["w"], cfg).reshape(
+        cfg.kv_lora_rank, cfg.n_heads, cfg.v_head_dim)
+    out = jnp.einsum("bhr,rhv->bhv", ctx_lat, wuv)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.v_head_dim).astype(x.dtype)
+    return L.dense(p["wo"], out, cfg), c_arena, r_arena
+
+
+def _decode_step_paged(params, cache, token, cfg: ModelConfig, active):
+    """Paged decode: every row writes at its OWN position ``lens[b]`` (no
+    shared frontier), inactive rows' writes are dropped and their
+    ``lens`` frozen.  Out-of-capacity positions drop too (the no-clamp
+    guarantee); concrete frontiers raise eagerly like the linear lane."""
+    from repro.core.tracing import is_tracer
+
+    b = token.shape[0]
+    lens = jnp.asarray(cache["lens"], jnp.int32)
+    tables = cache["block_tables"]
+    adv = jnp.ones((b,), jnp.int32) if active is None \
+        else jnp.asarray(active).astype(jnp.int32)
+    if not is_tracer(lens) and not is_tracer(cache["max_len"]):
+        import numpy as _np
+        live = _np.asarray(adv).astype(bool)
+        if live.any():
+            L.check_cache_capacity(
+                int(_np.asarray(lens)[live].max()),
+                int(cache["max_len"]), "paged KV cache")
+    ok = (adv > 0) & (lens < jnp.asarray(cache["max_len"], jnp.int32))
+    x = params["tok_embed"][token][:, None, :].astype(L.cdtype(cfg))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    if cfg.mla:
+        def body(h, layer):
+            lp, c_a, r_a = layer
+            a, c_a, r_a = _decode_attn_mla_paged(
+                lp["attn"], L.rms_norm(lp["ln1"], h, cfg), c_a, r_a,
+                tables, lens, ok, cfg)
+            h = h + a
+            hh = L.rms_norm(lp["ln2"], h, cfg)
+            f = L.moe(lp["moe"], hh, cfg) if cfg.is_moe else \
+                L.mlp(lp["mlp"], hh, cfg)
+            return h + f, (c_a, r_a)
+
+        x, (c_new, r_new) = lax.scan(
+            body, x, (params["layers"], cache["c_kv"], cache["k_rope"]))
+        new_cache = dict(cache, c_kv=c_new, k_rope=r_new, lens=lens + adv)
+    else:
+        def body(h, layer):
+            lp, k_a, v_a = layer
+            a, k_a, v_a = _decode_attn_dense_paged(
+                lp["attn"], L.rms_norm(lp["ln1"], h, cfg), k_a, v_a,
+                tables, lens, ok, cfg)
+            h = h + a
+            hh = L.rms_norm(lp["ln2"], h, cfg)
+            f = L.moe(lp["moe"], hh, cfg) if cfg.is_moe else \
+                L.mlp(lp["mlp"], hh, cfg)
+            return h + f, (k_a, v_a)
+
+        x, (k_new, v_new) = lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = dict(cache, k=k_new, v=v_new, lens=lens + adv)
+
+    x = L.rms_norm(params["final_norm"], x, cfg)
+    logits = (x[:, 0, :] @ _unembed_weight(params, cfg).astype(x.dtype))
+    return logits.astype(jnp.float32), new_cache
+
+
 def _decode_lens(cache, pos, batch: int):
     lens = cache.get("lens")
     if lens is None:                         # legacy cache without metadata
@@ -463,7 +676,13 @@ def decode_step(params, cache, token, cfg: ModelConfig, active=None):
     its ``lens`` cannot hold ``compact`` back from reclaiming headroom.
     Inactive rows still produce (discarded) logits — batched decode has
     no per-row early exit.
+
+    Paged caches (a ``block_tables`` leaf) take the row-local lane:
+    every row writes at its own ``lens[b]`` inside its own blocks, so
+    there is no shared frontier to advance (and no ``len`` leaf).
     """
+    if "block_tables" in cache:
+        return _decode_step_paged(params, cache, token, cfg, active)
     pos = cache["len"]
     b = token.shape[0]
     lens = _decode_lens(cache, pos, b)

@@ -18,7 +18,12 @@ clamps out-of-range starts).  The engine:
   left-padded to a common length, each row carries its own length, RoPE
   positions and attention masks are per-row — the seed of continuous
   batching;
-* samples greedily or with temperature, batched, from one PRNG stream.
+* samples greedily or with temperature, batched, from one PRNG stream;
+* optionally runs the **paged** cache layout (``paged=True``,
+  transformer family): a block arena + per-row block tables replaces
+  the dense ``batch x max_len`` preallocation, rows allocate blocks
+  from a host-side ``kvcache.BlockPool`` as they grow, and the token
+  streams are byte-identical to the dense layout's.
 
 Usage::
 
@@ -39,6 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compress import kvcache as kvc
 from repro.models import get_family
 from repro.models.config import ModelConfig
 
@@ -69,13 +75,38 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, *, max_len: int,
                  temperature: float = 0.0, seed: int = 0,
-                 pad_id: int = 0):
+                 pad_id: int = 0, paged: bool = False,
+                 block_size: int = 16, n_blocks: int = 0):
+        """``paged=True`` swaps the dense preallocated cache for the
+        block-table layout (transformer family only): prefill allocates
+        arena blocks per row from a host-side ``BlockPool`` free list
+        instead of reserving ``batch x max_len`` slots up front.
+        ``n_blocks`` sizes the shared arena (0 = worst case, one full
+        table per row — no memory win, but never out of blocks)."""
         self.cfg = cfg
         self.params = params
         self.fam = get_family(cfg)
         self.max_len = int(max_len)
         self.temperature = float(temperature)
         self.pad_id = int(pad_id)
+        self.paged = bool(paged)
+        self.block_size = int(block_size)
+        self.n_blocks = int(n_blocks)
+        if self.paged:
+            if cfg.family != "transformer":
+                raise ValueError(
+                    "paged KV caches need the transformer family's "
+                    f"per-row decode positions (got {cfg.family!r})")
+            if self.block_size < 1:
+                raise ValueError(
+                    f"block_size must be >= 1, got {self.block_size}")
+            from repro.models import layers as L
+            from repro.models import transformer as T
+            self.table_width = T.paged_table_width(
+                cfg, self.block_size, self.max_len)
+            self.window_lane = L.paged_is_window_lane(
+                T._paged_window(cfg), self.block_size, self.table_width)
+        self.pool = None               # BlockPool of the last paged prefill
         self._key = jax.random.PRNGKey(seed)
         self._prefill_jit = {}
         self._decode_jit = {}
@@ -105,11 +136,16 @@ class Engine:
     # prefill
     # ------------------------------------------------------------------
 
-    def _prefill_fn(self, ragged: bool, kw_names: tuple):
-        cfg, fam, ml = self.cfg, self.fam, self.max_len
+    def _prefill_fn(self, ragged: bool, kw_names: tuple,
+                    n_blocks: int = 0):
+        cfg, fam, ml, bs = self.cfg, self.fam, self.max_len, \
+            self.block_size
 
         def run(params, tokens, lens, *kw_vals):
-            kw = dict(zip(kw_names, kw_vals))
+            kw = dict(zip(kw_names, kw_vals))    # tables ride past the zip
+            if n_blocks:
+                kw.update(block_tables=kw_vals[-1], block_size=bs,
+                          n_blocks=n_blocks)
             if ragged:
                 return fam.prefill(params, tokens, cfg, max_len=ml,
                                    prompt_lens=lens, **kw)
@@ -117,9 +153,45 @@ class Engine:
 
         return jax.jit(run)
 
-    def prefill(self, prompts, *, frames=None, visual=None):
+    def _row_blocks_needed(self, prompt_len: int, reserve: int) -> int:
+        """Blocks covering a row's prompt plus ``reserve`` decode
+        writes (window rows hold the full bounded ring)."""
+        if self.window_lane:
+            return self.table_width
+        need = min(prompt_len + reserve, self.max_len)
+        return -(-need // self.block_size)
+
+    def _alloc_tables(self, lens, reserve: int, n_blocks: int,
+                      pool=None):
+        """Host-side block allocation for a prompt batch: returns the
+        (B, W) int32 table (sentinel = n_blocks in unassigned entries)
+        and the pool it drew from."""
+        pool = pool or kvc.BlockPool(n_blocks)
+        tables = np.full((len(lens), self.table_width), n_blocks,
+                         np.int32)
+        for row, pl in enumerate(lens):
+            need = self._row_blocks_needed(int(pl), reserve)
+            tables[row, :need] = pool.alloc(need)
+        return tables, pool
+
+    def prefill(self, prompts, *, frames=None, visual=None,
+                reserve_tokens: int = 0, paged=None):
         """Run the (possibly ragged) prompt batch; returns
-        (cache, last-position logits (B,V), lens (B,))."""
+        (cache, last-position logits (B,V), lens (B,)).
+
+        On a paged engine, each row gets arena blocks covering its
+        prompt plus ``reserve_tokens`` decode writes (``generate``
+        reserves its whole budget up front so the one-scan decode never
+        needs new blocks); ``paged=False`` forces the dense linear
+        layout — the scheduler's admission path prefills rows linearly
+        and packs them into the shared pool arena itself.
+        """
+        use_paged = self.paged if paged is None else bool(paged)
+        if use_paged and not self.paged:
+            raise ValueError(
+                "prefill(paged=True) needs an engine constructed with "
+                "Engine(..., paged=True): only that sizes the block "
+                "tables and arena")
         tokens, lens = self.pack_prompts(prompts)
         b, s = tokens.shape
         if s > self.max_len:
@@ -140,13 +212,19 @@ class Engine:
                 "common length instead")
         kw = {k: v for k, v in (("frames", frames), ("visual", visual))
               if v is not None}
-        key = (ragged, tuple(sorted(kw)))
+        args = [kw[k] for k in sorted(kw)]
+        nb = 0
+        if use_paged:
+            nb = self.n_blocks or b * self.table_width
+            tables, self.pool = self._alloc_tables(
+                lens, int(reserve_tokens), nb)
+            args.append(jnp.asarray(tables))
+        key = (ragged, tuple(sorted(kw)), nb)
         if key not in self._prefill_jit:
             self._prefill_jit[key] = self._prefill_fn(
-                ragged, tuple(sorted(kw)))
+                ragged, tuple(sorted(kw)), n_blocks=nb)
         cache, logits = self._prefill_jit[key](
-            self.params, jnp.asarray(tokens), jnp.asarray(lens),
-            *(kw[k] for k in sorted(kw)))
+            self.params, jnp.asarray(tokens), jnp.asarray(lens), *args)
         return cache, logits, lens
 
     # ------------------------------------------------------------------
@@ -214,7 +292,19 @@ class Engine:
         (the scheduler) compact the cache first instead.
         """
         from repro.core.tracing import is_tracer
-        if not is_tracer(cache["len"]) and \
+        if "block_tables" in cache:
+            lens = cache["lens"]
+            if not is_tracer(lens):
+                act = np.ones((np.asarray(lens).shape[0],), bool) \
+                    if active is None else np.asarray(active, bool)
+                if act.any():
+                    hi = int(np.asarray(lens)[act].max())
+                    if hi + int(n_steps) > self.max_len:
+                        raise ValueError(
+                            f"decode_chunk: paged row frontier {hi} + "
+                            f"{int(n_steps)} steps exceeds engine "
+                            f"max_len {self.max_len}; retire rows first")
+        elif not is_tracer(cache["len"]) and \
                 int(cache["len"]) + int(n_steps) > self.max_len:
             raise ValueError(
                 f"decode_chunk: frontier {int(cache['len'])} + "
@@ -246,8 +336,9 @@ class Engine:
         preallocated ``max_len`` — out-of-capacity writes never clamp."""
         tokens, _ = self.pack_prompts(prompts)
         self._check_fits(tokens.shape[1], max_new_tokens)
-        cache, logits, lens = self.prefill(prompts, frames=frames,
-                                           visual=visual)
+        cache, logits, lens = self.prefill(
+            prompts, frames=frames, visual=visual,
+            reserve_tokens=max_new_tokens - 1)
         if max_new_tokens not in self._decode_jit:
             self._decode_jit[max_new_tokens] = self._decode_fn(
                 max_new_tokens)
@@ -265,8 +356,9 @@ class Engine:
         ``generate`` — kept for tests and dispatch-overhead benchmarks."""
         tokens, _ = self.pack_prompts(prompts)
         self._check_fits(tokens.shape[1], max_new_tokens)
-        cache, logits, lens = self.prefill(prompts, frames=frames,
-                                           visual=visual)
+        cache, logits, lens = self.prefill(
+            prompts, frames=frames, visual=visual,
+            reserve_tokens=max_new_tokens - 1)
         if "step" not in self._decode_jit:
             fam, cfg = self.fam, self.cfg
             self._decode_jit["step"] = jax.jit(

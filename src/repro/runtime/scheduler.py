@@ -35,6 +35,20 @@ Mechanics
 * inactive rows ride along in the batched decode with frozen ``lens``
   (``decode_step(active=...)``) and their sampled tokens are discarded.
 
+Paged mode (``Engine(paged=True)``) swaps the dense pool for the
+block-table layout and DELETES compaction from this loop entirely:
+addressing is row-local, so admission packs the prompt's KV into
+freshly allocated arena blocks (``kvcache.paged_adopt_row``) without
+touching any other row, retirement frees the row's blocks back to the
+host-side ``BlockPool``, and live rows lazily extend their tables
+between chunks.  Each request's worst-case block demand is RESERVED at
+admission, so extension can never find the pool empty; when a
+reservation does not fit, admission defers (FIFO) until retirements
+free blocks.  Peak cache memory is the blocks actually resident
+(``Σ tokens`` rounded up) instead of ``slots x max_len``, and the
+token streams are identical to the compaction scheduler's
+(``tests/test_paged.py``).
+
 Sampling: greedy decoding is deterministic and token-identical to
 isolated generation.  With ``temperature > 0`` the scheduler is still
 deterministic for a fixed seed, but the PRNG stream interleaves rows
@@ -126,9 +140,35 @@ class Scheduler:
         self.n_slots = int(n_slots)
         self.chunk_size = int(chunk_size)
         self.eos_id = eos_id
+        self.paged = bool(getattr(engine, "paged", False))
         fam = get_family(engine.cfg)
-        self.cache = fam.init_cache(engine.cfg, self.n_slots,
-                                    engine.max_len)
+        if self.paged:
+            from repro.models import transformer as T
+            self.block_size = engine.block_size
+            self.table_width = engine.table_width
+            self.n_blocks = engine.n_blocks or \
+                self.n_slots * self.table_width
+            self.pool = kvc.BlockPool(self.n_blocks)
+            self.cache = T.init_paged_cache(
+                engine.cfg, self.n_slots, engine.max_len,
+                self.block_size, self.n_blocks)
+            self._window = T._paged_window(engine.cfg)
+            self._tables = np.full(
+                (self.n_slots, self.table_width), self.n_blocks, np.int32)
+            self._row_blocks: list = [[] for _ in range(self.n_slots)]
+            self._worst = [0] * self.n_slots
+            self._outstanding = 0      # reserved-but-unallocated blocks
+            # high-water mark of allocated + reserved blocks: an arena
+            # of this size replays the same trace with zero deferrals
+            # (the benchmark's capacity-planning number)
+            self.peak_committed = 0
+            self._adopt_paged = jax.jit(
+                kvc.paged_adopt_row,
+                static_argnames=("window", "src_ring"))
+            self._release = jax.jit(kvc.paged_release_rows)
+        else:
+            self.cache = fam.init_cache(engine.cfg, self.n_slots,
+                                        engine.max_len)
         self._slots: list = [None] * self.n_slots
         self._queue: deque = deque()
         self._cur_tok = np.zeros((self.n_slots,), np.int32)
@@ -170,6 +210,13 @@ class Scheduler:
                 f"{len(prompt)} + {max_new_tokens} new + chunk "
                 f"{self.chunk_size} headroom) > engine max_len "
                 f"{self.engine.max_len}")
+        if self.paged:
+            worst = self._worst_blocks(len(prompt), max_new_tokens)
+            if worst > self.n_blocks:
+                raise ValueError(
+                    f"request needs up to {worst} cache blocks > block "
+                    f"pool capacity {self.n_blocks} (block_size "
+                    f"{self.block_size})")
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append(Request(rid=rid, prompt=prompt,
@@ -197,22 +244,94 @@ class Scheduler:
             self.cache = self._compact(self.cache, jnp.int32(target))
             self._frontier = int(target)
 
+    # -- paged block accounting ----------------------------------------
+
+    def _worst_blocks(self, prompt_len: int, max_new: int) -> int:
+        """Upper bound on the blocks a request can ever hold at once —
+        reserved at admission so lazy per-chunk extension NEVER finds
+        the pool empty.  Same formula the engine allocates by: a row
+        can overshoot its stopping point by up to a full chunk."""
+        return self.engine._row_blocks_needed(
+            prompt_len, max_new - 1 + self.chunk_size)
+
+    def _admit_paged(self, req: Request, row: int):
+        plen = len(req.prompt)
+        worst = self._worst_blocks(plen, req.max_new_tokens)
+        if self.pool.n_free - self._outstanding < worst:
+            return False               # wait for retirements' blocks
+        # batch-1 LINEAR prefill: the same jitted path (and therefore
+        # the same KV values) an isolated Engine.generate would run;
+        # the prompt is then packed into freshly allocated blocks —
+        # admission never moves other rows (nothing to compact)
+        row_cache, logits, _ = self.engine.prefill([req.prompt],
+                                                   paged=False)
+        now = self.table_width if self.engine.window_lane else \
+            -(-plen // self.block_size)
+        ids = self.pool.alloc(now)
+        block_ids = np.full((self.table_width,), self.n_blocks, np.int32)
+        block_ids[:now] = ids
+        cap = min(self.engine.max_len, self._window) if self._window \
+            else self.engine.max_len
+        self.cache = self._adopt_paged(
+            self.cache, row_cache, jnp.int32(row),
+            jnp.asarray(block_ids), window=self._window,
+            src_ring=plen > cap)
+        self._tables[row] = block_ids
+        self._row_blocks[row] = ids
+        self._worst[row] = worst
+        self._outstanding += worst - now
+        self.peak_committed = max(
+            self.peak_committed, self.pool.in_use + self._outstanding)
+        tok0, self.engine._key = sample_token(
+            logits, self.engine._key, self.engine.temperature)
+        return int(np.asarray(tok0)[0])
+
+    def _ensure_blocks(self):
+        """Extend each live dense row's table to cover the next chunk's
+        writes (window rows never grow: their ring recycles in place).
+        The admission-time reservation guarantees the pool can serve
+        this."""
+        changed = False
+        for i, slot in enumerate(self._slots):
+            if slot is None or slot.done or self.engine.window_lane:
+                continue
+            need = -(-min(slot.lens + self.chunk_size,
+                          self.engine.max_len) // self.block_size)
+            have = len(self._row_blocks[i])
+            if need > have:
+                ids = self.pool.alloc(need - have)
+                self._tables[i, have:need] = ids
+                self._row_blocks[i].extend(ids)
+                self._outstanding -= len(ids)
+                changed = True
+        if changed:
+            self.cache = dict(self.cache,
+                              block_tables=jnp.asarray(self._tables))
+
     def _admit(self):
         free = [i for i, s in enumerate(self._slots) if s is None]
         while self._queue and free:
-            req = self._queue.popleft()
-            row = free.pop(0)
-            plen = len(req.prompt)
-            # batch-1 prefill: the same jitted path (and therefore the
-            # same KV bytes) an isolated Engine.generate would run
-            row_cache, logits, _ = self.engine.prefill([req.prompt])
-            tok0, self.engine._key = sample_token(
-                logits, self.engine._key, self.engine.temperature)
-            tok0 = int(np.asarray(tok0)[0])
-            if plen > self._frontier:      # long prompt: raise the frontier
-                self._set_frontier(plen)
-            self.cache = self._adopt(self.cache, row_cache,
-                                     jnp.int32(row))
+            req = self._queue[0]
+            row = free[0]
+            if self.paged:
+                tok0 = self._admit_paged(req, row)
+                if tok0 is False:      # pool cannot cover the request yet
+                    break              # FIFO: do not admit around it
+            else:
+                plen = len(req.prompt)
+                # batch-1 prefill: the same jitted path (and therefore
+                # the same KV bytes) an isolated Engine.generate would
+                # run
+                row_cache, logits, _ = self.engine.prefill([req.prompt])
+                tok0, self.engine._key = sample_token(
+                    logits, self.engine._key, self.engine.temperature)
+                tok0 = int(np.asarray(tok0)[0])
+                if plen > self._frontier:  # long prompt: raise frontier
+                    self._set_frontier(plen)
+                self.cache = self._adopt(self.cache, row_cache,
+                                         jnp.int32(row))
+            self._queue.popleft()
+            free.pop(0)
             slot = _Slot(req=req, emitted=[tok0],
                          admitted_step=self.steps_run)
             # a request can finish on its very first (prefill) token
@@ -238,8 +357,22 @@ class Scheduler:
                 finished_step=self.steps_run))
             self._slots[i] = None
             self.n_retired += 1
+            if self.paged:
+                self.pool.free(self._row_blocks[i])
+                self._outstanding -= \
+                    self._worst[i] - len(self._row_blocks[i])
+                self._row_blocks[i] = []
+                self._worst[i] = 0
+                self._tables[i] = self.n_blocks          # sentinel
         if done_mask.any():
-            self.cache = self._reset(self.cache, jnp.asarray(done_mask))
+            if self.paged:
+                # lens -> 0 + sentinel tables; freed arena blocks are
+                # overwritten wholesale on reuse, nothing to wipe
+                self.cache = self._release(self.cache,
+                                           jnp.asarray(done_mask))
+            else:
+                self.cache = self._reset(self.cache,
+                                         jnp.asarray(done_mask))
         return completions
 
     def step(self):
@@ -252,7 +385,10 @@ class Scheduler:
             # token); surface those without burning a decode chunk
             return self._retire()
 
-        if self._frontier + self.chunk_size > self.engine.max_len:
+        if self.paged:
+            # no shared frontier: rows extend their own block tables
+            self._ensure_blocks()
+        elif self._frontier + self.chunk_size > self.engine.max_len:
             # reclaim headroom freed by retirements / short rows
             target = max(s.lens for s in self._slots
                          if s is not None and not s.done)
@@ -262,7 +398,8 @@ class Scheduler:
             self.cache, self._cur_tok, self.chunk_size,
             active=jnp.asarray(active))
         toks = np.asarray(toks)
-        self._frontier += self.chunk_size     # mirror of cache["len"]
+        if not self.paged:
+            self._frontier += self.chunk_size  # mirror of cache["len"]
         self.steps_run += self.chunk_size
         self.n_chunks += 1
 

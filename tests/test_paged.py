@@ -1,0 +1,339 @@
+"""Paged KV cache regression tests.
+
+The load-bearing invariant of the paged memory model: swapping the dense
+``slots x max_len`` cache for a block arena + per-row block tables must
+be invisible to the tokens.  Pinned here on all three transformer
+attention lanes (dense, MLA, sliding-window — where the ring buffer
+becomes block recycling), through ``Engine.generate`` (scan AND the
+per-step reference loop) and through the continuous-batching scheduler,
+which must reproduce the compaction scheduler's streams token-for-token
+and schedule-for-schedule while the arena reports strictly fewer bytes
+than ``slots x max_len``.  Plus the ``BlockPool`` allocator invariants
+(no leak / double-alloc / over-capacity on random traces) and the
+explicit pattern/metadata leaf tagging.
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.compress import kvcache as kvc
+from repro.models import get_family
+from repro.models import transformer as T
+from repro.runtime.engine import Engine
+from repro.runtime.scheduler import Scheduler
+
+LANES = ["dense", "mla", "window"]
+
+
+def _cfg(lane, **kw):
+    if lane == "mla":
+        return configs.get_config("minicpm3-4b").reduced(
+            compute_dtype="float32", **kw)
+    cfg = configs.get_config("phi3-medium-14b").reduced(
+        compute_dtype="float32", **kw)
+    if lane == "window":
+        cfg = dataclasses.replace(cfg, sliding_window=8, attn_chunk_kv=8)
+    return cfg
+
+
+def _params(cfg, seed=0):
+    return get_family(cfg).init_params(jax.random.PRNGKey(seed), cfg)
+
+
+# ---------------------------------------------------------------------------
+# BlockPool allocator invariants (property-style, stdlib random)
+# ---------------------------------------------------------------------------
+
+def test_block_pool_random_traces_never_leak_or_double_allocate():
+    """Random submit/retire traces: every handed-out id is unique among
+    live allocations, usage never exceeds the arena, frees return
+    capacity exactly, and the high-water mark is faithful."""
+    rng = random.Random(1234)
+    for _ in range(50):
+        n_blocks = rng.randint(1, 64)
+        pool = kvc.BlockPool(n_blocks)
+        live = {}                       # handle -> ids
+        peak = 0
+        for step in range(200):
+            assert pool.n_free + pool.in_use == n_blocks   # conservation
+            if live and (rng.random() < 0.4 or pool.n_free == 0):
+                ids = live.pop(rng.choice(list(live)))
+                pool.free(ids)
+            else:
+                n = rng.randint(0, n_blocks)
+                if n > pool.n_free:
+                    with pytest.raises(MemoryError):
+                        pool.alloc(n)
+                    continue
+                ids = pool.alloc(n)
+                assert len(set(ids)) == len(ids)
+                flat = [i for v in live.values() for i in v]
+                assert not set(ids) & set(flat)            # no double-alloc
+                assert all(0 <= i < n_blocks for i in ids)
+                live[step] = ids
+            in_use = sum(len(v) for v in live.values())
+            assert pool.in_use == in_use
+            peak = max(peak, in_use)
+            assert pool.peak_in_use == peak
+        for ids in live.values():
+            pool.free(ids)
+        assert pool.n_free == n_blocks and pool.in_use == 0
+
+
+def test_block_pool_rejects_double_free_and_foreign_ids():
+    pool = kvc.BlockPool(4)
+    ids = pool.alloc(2)
+    pool.free(ids)
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.free(ids)                  # double free
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.free([99])                 # never existed
+
+
+# ---------------------------------------------------------------------------
+# token identity: paged engine == linear/ring engine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lane", LANES)
+def test_paged_generate_token_identity(lane):
+    """Ragged batch, generation long enough to cross block boundaries
+    (and, on the window lane, to recycle blocks through full ring
+    wraparounds): the paged engine must emit byte-identical tokens to
+    the linear/ring-buffer engine, in the scan AND the per-step loop."""
+    cfg = _cfg(lane)
+    params = _params(cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab, n).tolist() for n in (7, 10, 4)]
+
+    lin = Engine(cfg, params, max_len=32, seed=0)
+    pag = Engine(cfg, params, max_len=32, seed=0, paged=True, block_size=4)
+    ref = lin.generate(prompts, 14).tokens
+    got = pag.generate(prompts, 14).tokens
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_array_equal(
+        pag.generate_stepwise(prompts, 14).tokens, ref)
+    # the engine records the arena's actual high-water mark
+    assert 0 < pag.pool.peak_in_use <= pag.pool.n_blocks
+
+
+def test_paged_generate_token_identity_posit_kv():
+    """The paged layout must compose with the posit KV codec: patterns
+    round-trip through arena blocks bit-identically."""
+    cfg = _cfg("dense", kv_posit="posit8")
+    params = _params(cfg)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(1, cfg.vocab, n).tolist() for n in (6, 9)]
+    ref = Engine(cfg, params, max_len=32, seed=0).generate(prompts, 10)
+    pag = Engine(cfg, params, max_len=32, seed=0, paged=True,
+                 block_size=4).generate(prompts, 10)
+    np.testing.assert_array_equal(pag.tokens, ref.tokens)
+
+
+# ---------------------------------------------------------------------------
+# paged scheduler == compaction scheduler, with fewer cache bytes
+# ---------------------------------------------------------------------------
+
+def _run_sched(sched, prompts, gens):
+    rids = [sched.submit(p, g) for p, g in zip(prompts, gens)]
+    done = sched.run(max_rounds=200)
+    return rids, done
+
+
+@pytest.mark.parametrize("lane", ["dense", "window"])
+def test_paged_scheduler_matches_compaction_scheduler(lane):
+    """Same submissions through a two-slot pool: the paged scheduler
+    (no ``compact`` anywhere) must match the PR 4 compaction scheduler
+    token-for-token AND step-for-step, while its arena — sized below
+    ``slots x table_width`` — reports strictly fewer cache bytes than
+    the dense pool."""
+    cfg = _cfg(lane)
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    plens = [5, 9, 3, 7, 4, 6]
+    gens = [4, 8, 4, 8, 4, 8]
+    prompts = [rng.integers(1, cfg.vocab, n).tolist() for n in plens]
+
+    lin = Scheduler(Engine(cfg, params, max_len=32, seed=0),
+                    n_slots=2, chunk_size=4)
+    rids_l, done_l = _run_sched(lin, prompts, gens)
+
+    nb = 10 if lane == "dense" else 0    # dense: strictly below 2*8 worst
+    pag = Scheduler(Engine(cfg, params, max_len=32, seed=0, paged=True,
+                           block_size=4, n_blocks=nb),
+                    n_slots=2, chunk_size=4)
+    rids_p, done_p = _run_sched(pag, prompts, gens)
+
+    for a, b in zip(rids_l, rids_p):
+        np.testing.assert_array_equal(done_p[b].tokens, done_l[a].tokens)
+        assert done_p[b].admitted_step == done_l[a].admitted_step
+        assert done_p[b].finished_step == done_l[a].finished_step
+    if lane == "dense":
+        assert kvc.cache_report(pag.cache)["bytes"] < \
+            kvc.cache_report(lin.cache)["bytes"]
+    # no block leaked once everything retired
+    assert pag.pool.in_use == 0 and pag._outstanding == 0
+
+
+def test_paged_scheduler_defers_admission_when_pool_is_tight():
+    """A pool too small to hold every concurrent request must DEFER
+    admissions (FIFO) instead of corrupting or failing — each stream
+    still matches its isolated reference."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(7)
+    plens = [5, 9, 3, 7]
+    gens = [4, 8, 4, 8]
+    prompts = [rng.integers(1, cfg.vocab, n).tolist() for n in plens]
+    ref_eng = Engine(cfg, params, max_len=32, seed=0)
+    refs = [ref_eng.generate([p], g).tokens[0]
+            for p, g in zip(prompts, gens)]
+
+    # 5 blocks of 4 slots: roughly one request's worst case at a time
+    sched = Scheduler(Engine(cfg, params, max_len=32, seed=0, paged=True,
+                             block_size=4, n_blocks=5),
+                      n_slots=2, chunk_size=4)
+    rids, done = _run_sched(sched, prompts, gens)
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(done[rid].tokens, ref)
+    assert sched.pool.peak_in_use <= 5
+
+
+def test_paged_scheduler_rejects_request_larger_than_pool():
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    sched = Scheduler(Engine(cfg, params, max_len=32, seed=0, paged=True,
+                             block_size=4, n_blocks=3),
+                      n_slots=1, chunk_size=4)
+    with pytest.raises(ValueError, match="block"):
+        sched.submit(list(range(1, 13)), 8)   # needs ceil(23/4)=6 > 3
+
+
+# ---------------------------------------------------------------------------
+# guarded writes / capacity
+# ---------------------------------------------------------------------------
+
+def test_paged_decode_past_capacity_raises_eagerly():
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(9)
+    eng = Engine(cfg, params, max_len=8, seed=0, paged=True, block_size=4)
+    prompts = [rng.integers(1, cfg.vocab, 6).tolist()]
+    cache, logits, _ = eng.prefill(prompts, reserve_tokens=2)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(2):                       # positions 6, 7 fit
+        logits, cache = T.decode_step(params, cache, tok, cfg)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    with pytest.raises(ValueError, match="capacity"):
+        T.decode_step(params, cache, tok, cfg)   # position 8 == max_len
+
+
+def test_paged_sentinel_tables_drop_writes():
+    """A released row's sentinel table entries must route decode writes
+    into the drop lane: the arena is bit-unchanged afterwards."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(10)
+    eng = Engine(cfg, params, max_len=16, seed=0, paged=True, block_size=4)
+    cache, logits, _ = eng.prefill(
+        [rng.integers(1, cfg.vocab, 5).tolist()], reserve_tokens=4)
+    released = kvc.paged_release_rows(cache, jnp.asarray([True]))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    _, after = T.decode_step(params, released, tok, cfg,
+                             active=jnp.asarray([False]))
+    np.testing.assert_array_equal(np.asarray(after["k"]),
+                                  np.asarray(released["k"]))
+    assert int(after["lens"][0]) == 0        # frozen, not advanced
+
+
+# ---------------------------------------------------------------------------
+# explicit pattern/metadata leaf tagging
+# ---------------------------------------------------------------------------
+
+def test_scale_cache_leaves_paged_block_tables_alone():
+    cfg = _cfg("dense", kv_posit="posit16")
+    params = _params(cfg)
+    rng = np.random.default_rng(11)
+    eng = Engine(cfg, params, max_len=16, seed=0, paged=True, block_size=4)
+    cache, _, _ = eng.prefill([rng.integers(1, cfg.vocab, 6).tolist()])
+    scaled = kvc.scale_cache(cache, 0.5, "posit16")
+    np.testing.assert_array_equal(np.asarray(scaled["block_tables"]),
+                                  np.asarray(cache["block_tables"]))
+    np.testing.assert_array_equal(np.asarray(scaled["lens"]),
+                                  np.asarray(cache["lens"]))
+    assert not (np.asarray(scaled["k"]) == np.asarray(cache["k"])).all()
+
+
+def test_unknown_unsigned_leaf_raises_instead_of_guessing():
+    """The old dtype-sniffing heuristic would have 'scaled' any unsigned
+    bookkeeping leaf as posit patterns; the explicit schema refuses."""
+    cache = {"k": jnp.zeros((4, 8), jnp.uint16),
+             "my_table": jnp.zeros((4,), jnp.uint32)}
+    with pytest.raises(ValueError, match="my_table"):
+        kvc.scale_cache(cache, 0.5, "posit16")
+    with pytest.raises(ValueError, match="my_table"):
+        kvc.dequantize_cache(cache, "posit16")
+    # ...and quantize refuses to silently SKIP an unregistered float
+    # leaf (the codec would otherwise quietly stop compressing it)
+    with pytest.raises(ValueError, match="conv_state"):
+        kvc.quantize_cache({"k": jnp.zeros((4, 8), jnp.float32),
+                            "conv_state": jnp.zeros((4,), jnp.float32)},
+                           "posit16")
+
+
+def test_prefill_paged_override_needs_paged_engine():
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    eng = Engine(cfg, params, max_len=16, seed=0)     # dense engine
+    with pytest.raises(ValueError, match="paged=True"):
+        eng.prefill([[1, 2, 3]], paged=True)
+
+
+def test_linear_surgery_ops_reject_paged_caches():
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(12)
+    eng = Engine(cfg, params, max_len=16, seed=0, paged=True, block_size=4)
+    cache, _, _ = eng.prefill([rng.integers(1, cfg.vocab, 5).tolist()])
+    with pytest.raises(ValueError, match="paged"):
+        kvc.compact(cache, target_len=8)
+    with pytest.raises(ValueError, match="paged"):
+        kvc.reset_slots(cache, jnp.asarray([True]))
+
+
+# ---------------------------------------------------------------------------
+# full ragged-trace comparison (slow, main lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("lane", LANES)
+def test_paged_trace_identity_all_lanes(lane):
+    """A full Poisson trace through both schedulers: identical
+    completions on every lane, plus the MLA lane's scheduler identity
+    (the fast test covers dense/window)."""
+    from repro.launch.serve import drive_trace, poisson_trace
+    cfg = _cfg(lane)
+    params = _params(cfg)
+    trace = poisson_trace(np.random.default_rng(21), 10, 0.8,
+                          cfg.vocab, 10, 8)
+    max_len = 10 + 8 - 1 + 4
+
+    lin = Scheduler(Engine(cfg, params, max_len=max_len, seed=0),
+                    n_slots=2, chunk_size=4)
+    done_l, _ = drive_trace(lin, trace)
+    pag = Scheduler(Engine(cfg, params, max_len=max_len, seed=0,
+                           paged=True, block_size=4),
+                    n_slots=2, chunk_size=4)
+    done_p, _ = drive_trace(pag, trace)
+
+    assert done_l.keys() == done_p.keys()
+    for rid in done_l:
+        np.testing.assert_array_equal(done_p[rid].tokens,
+                                      done_l[rid].tokens)
+        assert done_p[rid].finished_step == done_l[rid].finished_step
+    assert pag.pool.in_use == 0
