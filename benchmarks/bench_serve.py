@@ -30,10 +30,18 @@ arena from the trace's committed-blocks high-water mark, pass 2 reruns
 on that right-sized arena and asserts token/schedule identity with
 strictly fewer peak cache bytes than the dense ``slots x max_len`` pool.
 
+The prefix-caching section replays a SHARED-prefix trace (every prompt
+opens with the same system prefix) through the paged scheduler with and
+without ``prefix_cache=True`` and asserts token identity with strictly
+fewer prefill tokens and strictly fewer peak physical blocks — the
+dedup win, dropping roughly with the share ratio.
+
 ``--smoke`` shrinks the sweep for the CI fast lane (exercises prefill
 headroom, ring-free dense decode, both posit codecs, and the
 continuous-batching scheduler end to end); ``--paged`` runs ONLY the
-paged-vs-compaction comparison (the fast lane's paged smoke).
+paged-vs-compaction comparison (the fast lane's paged smoke), and
+``--prefix-share`` adds (or alone, runs only) the prefix-caching
+comparison.
 """
 from __future__ import annotations
 
@@ -47,7 +55,8 @@ import jax
 
 from repro import configs
 from repro.compress.kvcache import cache_report
-from repro.launch.serve import drive_trace, poisson_trace
+from repro.launch.serve import (drive_trace, poisson_trace,
+                                shared_prefix_trace)
 from repro.models import get_family
 from repro.runtime.engine import Engine
 from repro.runtime.scheduler import Scheduler
@@ -109,6 +118,7 @@ def run(smoke: bool = False, paged: bool = True):
     rows.extend(run_batching_comparison(smoke=smoke))
     if paged:
         rows.extend(run_paged_comparison(smoke=smoke))
+        rows.extend(run_prefix_comparison(smoke=smoke))
     return rows
 
 
@@ -268,13 +278,80 @@ def run_paged_comparison(smoke: bool = False):
     ]
 
 
+def run_prefix_comparison(smoke: bool = False):
+    """Prefix caching vs plain paging on a shared-prefix trace.
+
+    Every prompt opens with the same system prefix (share ratio ~0.75),
+    the regime prefix caching is built for.  The prefix-cached pass must
+    reproduce the non-sharing paged pass token for token while
+    prefilling strictly fewer tokens and committing strictly fewer peak
+    PHYSICAL blocks — both dropping roughly with the share ratio (the
+    matched prefix is stored once instead of once per resident sharer).
+    """
+    if smoke:
+        n_req, n_slots, plen, gen, chunk, rate = 8, 2, 16, 8, 4, 1.0
+    else:
+        n_req, n_slots, plen, gen, chunk, rate = 24, 4, 32, 16, 4, 1.2
+    block, share = 4, 0.75
+    max_len = plen + gen - 1 + chunk
+    cfg = configs.get_config(ARCH).reduced(compute_dtype="float32")
+    params = get_family(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    trace = shared_prefix_trace(np.random.default_rng(13), n_req, rate,
+                                cfg.vocab, plen, gen, share=share)
+
+    base = Scheduler(Engine(cfg, params, max_len=max_len, seed=0,
+                            paged=True, block_size=block),
+                     n_slots=n_slots, chunk_size=chunk)
+    t0 = time.perf_counter()
+    done_b, _ = drive_trace(base, trace)
+    b_wall = time.perf_counter() - t0
+
+    pfx = Scheduler(Engine(cfg, params, max_len=max_len, seed=0,
+                           paged=True, block_size=block),
+                    n_slots=n_slots, chunk_size=chunk, prefix_cache=True)
+    t0 = time.perf_counter()
+    done_p, _ = drive_trace(pfx, trace)
+    p_wall = time.perf_counter() - t0
+
+    assert done_b.keys() == done_p.keys()
+    for rid in done_b:
+        assert (done_p[rid].tokens == done_b[rid].tokens).all(), \
+            f"prefix caching changed the tokens of request {rid}"
+    assert pfx.prefix_hits > 0, "shared-prefix trace produced no hits"
+    assert pfx.prefill_tokens < base.prefill_tokens, (
+        f"prefix caching did not cut prefill work "
+        f"({pfx.prefill_tokens} vs {base.prefill_tokens} tokens)")
+    assert pfx.peak_committed < base.peak_committed, (
+        f"prefix caching did not cut peak physical blocks "
+        f"({pfx.peak_committed} vs {base.peak_committed})")
+    return [
+        (f"serve_prefix_b{n_slots}_n{n_req}_share{share}",
+         p_wall * 1e6,
+         f"prefill_tokens={pfx.prefill_tokens} "
+         f"baseline_prefill_tokens={base.prefill_tokens} "
+         f"prefill_saved={1 - pfx.prefill_tokens / base.prefill_tokens:.2f} "
+         f"peak_physical_blocks={pfx.peak_committed} "
+         f"baseline_peak_blocks={base.peak_committed} "
+         f"peak_logical_blocks={pfx.peak_logical} "
+         f"prefix_hits={pfx.prefix_hits} cow_copies={pfx.n_cow} "
+         f"evictions={pfx.n_evicted} "
+         f"wall_vs_paged={p_wall / max(b_wall, 1e-9):.2f}x"),
+    ]
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     print("name,us_per_call,derived")
     if "--paged" in argv:
         rows = run_paged_comparison(smoke=smoke)
+        if "--prefix-share" in argv:
+            rows += run_prefix_comparison(smoke=smoke)
+    elif "--prefix-share" in argv:
+        rows = run_prefix_comparison(smoke=smoke)
     else:
         rows = run(smoke=smoke, paged=not smoke)
+        if smoke:
+            rows += run_prefix_comparison(smoke=smoke)
     for row in rows:
         print(",".join(str(x) for x in row))

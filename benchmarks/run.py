@@ -9,10 +9,18 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract).
 the same rows with the ``derived`` ``key=value`` pairs parsed into a
 dict (numbers as numbers), so the perf trajectory — serving tok/s,
 goodput, peak cache bytes — is machine-comparable across PRs.
+
+``benchmarks/baselines/BENCH_<suite>.json`` holds the committed
+baseline for a suite (seeded from the PR-6 run).  When one exists, each
+fresh row is compared against its committed counterpart and a
+``# delta vs baseline`` line is printed per matching row — refresh the
+baseline by copying the new ``BENCH_<suite>.json`` over it whenever a
+PR intentionally moves the numbers.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 
@@ -47,6 +55,47 @@ def _write_json(suite: str, rows) -> str:
     return path
 
 
+def _print_deltas(suite: str, rows) -> None:
+    """Compare fresh rows against ``benchmarks/baselines/BENCH_<suite>.json``
+    (committed baseline) and print a ``# delta vs baseline`` line per
+    matching row name.  Silent when no baseline is committed."""
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baselines", f"BENCH_{suite}.json")
+    if not os.path.exists(path):
+        return
+    try:
+        with open(path) as f:
+            base = {r["name"]: r for r in json.load(f)["rows"]}
+    except (OSError, ValueError, KeyError) as e:  # corrupt baseline: warn
+        print(f"# baseline {path} unreadable: {e}", file=sys.stderr)
+        return
+    for name, us, derived in rows:
+        ref = base.get(str(name))
+        if ref is None:
+            print(f"# {name}: new row (no baseline)", file=sys.stderr)
+            continue
+        parts = []
+        b_us = float(ref.get("us_per_call", 0.0))
+        if b_us > 0:
+            parts.append(f"us_per_call {(float(us) - b_us) / b_us:+.1%}")
+        fresh = _parse_derived(derived)
+        for k, bv in ref.get("derived", {}).items():
+            fv = fresh.get(k)
+            if not isinstance(bv, (int, float)) or isinstance(bv, bool):
+                continue
+            if not isinstance(fv, (int, float)) or isinstance(fv, bool):
+                continue
+            if fv == bv:
+                continue
+            if bv != 0:
+                parts.append(f"{k} {bv:g}->{fv:g} ({(fv - bv) / bv:+.1%})")
+            else:
+                parts.append(f"{k} {bv:g}->{fv:g}")
+        if parts:
+            print(f"# {name} delta vs baseline: " + " ".join(parts),
+                  file=sys.stderr, flush=True)
+
+
 def main() -> None:
     from benchmarks import (bench_accuracy, bench_compression, bench_cost,
                             bench_dnn_accuracy, bench_dot, bench_elementwise,
@@ -69,6 +118,7 @@ def main() -> None:
         rows = list(suites[name]())
         for row in rows:
             print(",".join(str(x) for x in row), flush=True)
+        _print_deltas(name, rows)
         if as_json:
             path = _write_json(name, rows)
             print(f"# wrote {path}", file=sys.stderr, flush=True)

@@ -126,7 +126,7 @@ def cache_bytes(cache) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 
 
-def cache_report(cache) -> dict:
+def cache_report(cache, pool=None) -> dict:
     """Actual vs f32-equivalent bytes and the compression ratio.
 
     Content leaves (posit patterns or reduced-precision floats, per the
@@ -138,14 +138,28 @@ def cache_report(cache) -> dict:
     ``bytes`` reflects the layout's actual footprint (a paged arena
     sized below ``slots x max_len`` reports correspondingly fewer
     bytes).
+
+    ``pool`` (a :class:`BlockPool`) extends the report for paged caches
+    with the PHYSICAL vs LOGICAL block split prefix sharing creates:
+    ``physical_blocks`` are resident arena blocks, ``logical_blocks``
+    sum the references to them (what a non-sharing pool would hold),
+    and the peaks record the trace high-water marks.  With no sharing
+    the two columns are equal; their gap is the deduplication win.
     """
     leaves = tree_util.tree_leaves_with_path(cache)
     actual = sum(x.size * x.dtype.itemsize for _, x in leaves)
     f32 = sum(
         x.size * 4 if _leaf_is_content(p, x) else x.size * x.dtype.itemsize
         for p, x in leaves)
-    return {"bytes": actual, "f32_bytes": f32,
-            "ratio": f32 / max(actual, 1)}
+    out = {"bytes": actual, "f32_bytes": f32,
+           "ratio": f32 / max(actual, 1)}
+    if pool is not None:
+        out.update(
+            physical_blocks=pool.in_use,
+            logical_blocks=pool.logical_in_use,
+            peak_physical_blocks=pool.peak_in_use,
+            peak_logical_blocks=pool.peak_logical)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -363,11 +377,29 @@ def merge_caches(cache_a, cache_b, name: str, weight_a: float = 0.5,
 
 
 class BlockPool:
-    """Host-side free list over ``n_blocks`` arena block ids.
+    """Host-side refcounted allocator over ``n_blocks`` arena block ids.
 
-    Allocation never hands out a block twice (double-alloc and
-    double-free raise), and ``peak_in_use`` records the high-water mark
-    for capacity planning / the benchmark's peak-cache-bytes report.
+    Contract (pinned by ``tests/test_paged.py`` and
+    ``tests/test_prefix.py``):
+
+    * ``alloc(n)`` hands out ``n`` distinct PHYSICALLY free blocks, each
+      with refcount 1.  A block is never handed out twice while any
+      reference to it is live.
+    * ``share(ids)`` increments refcounts — how a request (or the
+      scheduler's :class:`PrefixIndex`) borrows blocks another owner
+      packed.  Sharing never moves or copies data; it only pins the
+      block against physical reclaim.
+    * ``free(ids)`` / ``release(ids)`` (aliases) DECREMENT refcounts;
+      the block returns to the free list only when its refcount reaches
+      zero.  Dropping a reference that is not held raises (the double
+      free guard).
+    * ``in_use`` counts PHYSICAL resident blocks;
+      ``logical_in_use`` counts references (what a non-sharing pool
+      would have resident).  ``logical_in_use - in_use`` is therefore
+      the blocks deduplication is currently saving.
+    * ``peak_in_use`` / ``peak_logical`` are the corresponding
+      high-water marks (capacity planning / the benchmark's
+      physical-vs-logical report).
     """
 
     def __init__(self, n_blocks: int):
@@ -375,18 +407,35 @@ class BlockPool:
             raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
         self.n_blocks = int(n_blocks)
         self._free = list(range(self.n_blocks - 1, -1, -1))  # pop() -> asc
-        self._in_use: set = set()
+        self._ref: dict = {}            # block id -> refcount (>= 1)
         self.peak_in_use = 0
+        self.peak_logical = 0
 
     @property
     def n_free(self) -> int:
+        """Physically free blocks (refcount zero)."""
         return len(self._free)
 
     @property
     def in_use(self) -> int:
-        return len(self._in_use)
+        """Physically resident blocks (refcount >= 1)."""
+        return len(self._ref)
+
+    @property
+    def logical_in_use(self) -> int:
+        """Sum of refcounts: the blocks a non-sharing pool would hold."""
+        return sum(self._ref.values())
+
+    def refcount(self, block_id: int) -> int:
+        """Live references to ``block_id`` (0 = physically free)."""
+        return self._ref.get(int(block_id), 0)
+
+    def _note_peaks(self):
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self.peak_logical = max(self.peak_logical, self.logical_in_use)
 
     def alloc(self, n: int) -> list:
+        """Take ``n`` physically free blocks, refcount 1 each."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} blocks")
         if n > len(self._free):
@@ -394,20 +443,112 @@ class BlockPool:
                 f"BlockPool exhausted: {n} blocks requested, "
                 f"{len(self._free)} free of {self.n_blocks}")
         ids = [self._free.pop() for _ in range(n)]
-        self._in_use.update(ids)
-        self.peak_in_use = max(self.peak_in_use, len(self._in_use))
+        for i in ids:
+            self._ref[i] = 1
+        self._note_peaks()
         return ids
 
-    def free(self, ids) -> None:
-        ids = list(ids)
+    def share(self, ids) -> None:
+        """Increment refcounts: borrow already-resident blocks."""
+        ids = [int(i) for i in ids]
         for i in ids:
-            if i not in self._in_use:
+            if i not in self._ref:
+                raise ValueError(
+                    f"BlockPool.share: block {i} is not allocated; only "
+                    "resident blocks can be shared")
+        for i in ids:
+            self._ref[i] += 1
+        self._note_peaks()
+
+    def free(self, ids) -> None:
+        """Drop one reference per id; physical reclaim at refcount zero."""
+        ids = [int(i) for i in ids]
+        for i in ids:
+            if i not in self._ref:
                 raise ValueError(
                     f"BlockPool.free: block {i} is not allocated "
                     "(double free or foreign id)")
         for i in ids:
-            self._in_use.remove(i)
-            self._free.append(i)
+            self._ref[i] -= 1
+            if self._ref[i] == 0:
+                del self._ref[i]
+                self._free.append(i)
+
+    # ``release`` is the sharing-side name for the same decref.
+    release = free
+
+
+def prefix_block_hashes(tokens, block_size: int) -> list:
+    """Rolling content hash of each FULL block of a token sequence.
+
+    ``out[i]`` identifies the (i+1)-block-long prefix ``tokens[:(i+1)*bs]``
+    — each hash chains the previous one, so two sequences share
+    ``out[i]`` iff they agree on every token up to and including block
+    ``i``.  Partial trailing blocks get no hash: only blocks whose
+    content can never grow are content-addressable (a half-filled block
+    would change identity on the next decode write).
+    """
+    bs = int(block_size)
+    toks = [int(t) for t in tokens]
+    out = []
+    h = None
+    for i in range(len(toks) // bs):
+        h = hash((h,) + tuple(toks[i * bs:(i + 1) * bs]))
+        out.append(h)
+    return out
+
+
+class PrefixIndex:
+    """Content-addressed map: rolling block hash -> resident arena block.
+
+    The scheduler registers every fully-written prompt block here and
+    holds ONE pool reference per registered block, so cached prefixes
+    stay resident after their owner retires.  Entries are kept in LRU
+    order; a block whose only remaining reference is the index's
+    (``pool.refcount == 1``) is *evictable* — the scheduler reclaims
+    those, oldest first, when admission needs physical blocks.
+    First-writer-wins: registering a hash that is already mapped is a
+    no-op (the resident copy keeps serving matches).
+    """
+
+    def __init__(self):
+        from collections import OrderedDict
+        self._by_hash: "OrderedDict" = OrderedDict()   # hash -> block id
+        self._by_block: dict = {}                      # block id -> hash
+
+    def __len__(self) -> int:
+        return len(self._by_hash)
+
+    def get(self, h):
+        """Resident block id for hash ``h`` (None = miss); bumps LRU."""
+        if h in self._by_hash:
+            self._by_hash.move_to_end(h)
+            return self._by_hash[h]
+        return None
+
+    def put(self, h, block_id: int) -> bool:
+        """Register ``block_id`` under ``h``; False if already mapped."""
+        if h in self._by_hash:
+            return False
+        block_id = int(block_id)
+        if block_id in self._by_block:
+            raise ValueError(
+                f"PrefixIndex.put: block {block_id} already registered "
+                f"under another hash")
+        self._by_hash[h] = block_id
+        self._by_block[block_id] = h
+        return True
+
+    def pop_block(self, block_id: int):
+        """Drop the entry for ``block_id`` (eviction / physical free)."""
+        h = self._by_block.pop(int(block_id), None)
+        if h is not None:
+            del self._by_hash[h]
+        return h
+
+    def blocks_lru(self) -> list:
+        """Registered block ids, least-recently-matched first."""
+        return list(self._by_hash.values())
 
 
 def paged_adopt_row(cache, row_cache, row, block_ids, *, window: int = 0,

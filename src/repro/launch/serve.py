@@ -29,6 +29,18 @@ arena size; 0 = worst case): rows allocate blocks as they grow and free
 them at retirement, so peak cache memory tracks the tokens actually
 resident instead of the worst case, and admission never compacts.  The
 dense path stays selectable (omit ``--paged``) for A/B comparison.
+
+``--prefix-cache`` (with ``--continuous --paged``) deduplicates shared
+prompt prefixes: admission matches each prompt's leading full blocks
+against a content-addressed index of resident blocks, borrows the hits
+via refcounts and prefills only the unmatched suffix; writes into
+borrowed blocks copy-on-write first, so greedy token streams are
+unchanged.  ``--prefix-share`` generates the matching trace — every
+prompt opens with the same system prefix of that fractional length:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
+      --reduced --continuous --paged --prefix-cache --batch 4 \
+      --n-requests 16 --prompt-len 32 --prefix-share 0.75 --block-size 4
 """
 from __future__ import annotations
 
@@ -58,6 +70,26 @@ def poisson_trace(rng, n_requests, rate, vocab, prompt_len, gen):
         plen = int(rng.integers(max(2, prompt_len // 2), prompt_len + 1))
         g = int(rng.integers(max(2, gen // 4), gen + 1))
         out.append((float(t), rng.integers(1, vocab, plen).tolist(), g))
+    return out
+
+
+def shared_prefix_trace(rng, n_requests, rate, vocab, prompt_len, gen,
+                        share: float = 0.75):
+    """Request trace where every prompt opens with the SAME system
+    prefix: ``share`` of ``prompt_len`` tokens are drawn once and
+    reused, the tail is per-request.  Arrivals/generation lengths match
+    :func:`poisson_trace`'s model; this is the trace prefix caching is
+    built for (the share ratio bounds its possible win)."""
+    arrivals = np.cumsum(rng.exponential(1.0 / max(rate, 1e-9),
+                                         size=n_requests))
+    n_shared = max(1, int(prompt_len * share))
+    prefix = rng.integers(1, vocab, n_shared).tolist()
+    out = []
+    for t in arrivals:
+        tail = int(rng.integers(2, max(3, prompt_len - n_shared + 1)))
+        g = int(rng.integers(max(2, gen // 4), gen + 1))
+        out.append((float(t),
+                    prefix + rng.integers(1, vocab, tail).tolist(), g))
     return out
 
 
@@ -98,9 +130,16 @@ def run_continuous(args, cfg, params):
                                args.chunk_size)
     engine = _build_engine(args, cfg, params, max_len)
     sched = Scheduler(engine, n_slots=args.batch,
-                      chunk_size=args.chunk_size)
-    trace = poisson_trace(rng, args.n_requests, args.arrival_rate,
-                          cfg.vocab, args.prompt_len, args.gen)
+                      chunk_size=args.chunk_size,
+                      prefix_cache=args.prefix_cache)
+    if args.prefix_share > 0:
+        trace = shared_prefix_trace(rng, args.n_requests,
+                                    args.arrival_rate, cfg.vocab,
+                                    args.prompt_len, args.gen,
+                                    share=args.prefix_share)
+    else:
+        trace = poisson_trace(rng, args.n_requests, args.arrival_rate,
+                              cfg.vocab, args.prompt_len, args.gen)
     t0 = time.time()
     done, _ = drive_trace(sched, trace)
     dt = time.time() - t0
@@ -125,6 +164,14 @@ def run_continuous(args, cfg, params):
               f"{args.batch * sched.table_width}); peak in use "
               f"{sched.pool.peak_in_use}, peak committed "
               f"{sched.peak_committed}")
+    if args.prefix_cache:
+        print(f"  prefix cache: {sched.prefix_hits}/{len(done)} "
+              f"admissions hit, {sched.prefix_matched_tokens} prompt "
+              f"tokens served from cache ({sched.prefill_tokens} "
+              f"prefilled), {sched.n_cow} COW copies, "
+              f"{sched.n_evicted} evictions; peak committed "
+              f"physical {sched.peak_committed} vs logical "
+              f"{sched.peak_logical} blocks")
     return done
 
 
@@ -140,8 +187,9 @@ def main(argv=None):
                          "(transformer family only)")
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=0,
-                    help="preallocated cache length "
-                         "(default: prompt-len + gen)")
+                    help="preallocated cache length (default: "
+                         "prompt-len + gen for one-shot, plus "
+                         "chunk-size - 1 headroom with --continuous)")
     ap.add_argument("--kv-posit", choices=["posit16", "posit8", "none"],
                     default="none")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -167,7 +215,20 @@ def main(argv=None):
     ap.add_argument("--n-blocks", type=int, default=0,
                     help="arena size in blocks (with --paged; "
                          "0 = worst case, never out of blocks)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="content-addressed prefix sharing with "
+                         "copy-on-write block tables (with --continuous "
+                         "--paged): admissions borrow already-resident "
+                         "prompt blocks and prefill only the unmatched "
+                         "suffix; greedy token streams are unchanged")
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    help="with --continuous: fraction of each prompt "
+                         "drawn from ONE shared system prefix (0 = fully "
+                         "independent Poisson prompts); the share ratio "
+                         "bounds the possible prefix-cache win")
     args = ap.parse_args(argv)
+    if args.prefix_cache and not (args.continuous and args.paged):
+        ap.error("--prefix-cache requires --continuous --paged")
 
     cfg = configs.get_config(args.arch)
     if args.reduced:

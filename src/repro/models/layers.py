@@ -565,6 +565,80 @@ def paged_pack(arena, kvs, tables, lens, *, window: int = 0,
     return arena.at[:, ids].set(blocks, mode="drop")
 
 
+def paged_gather_layers(arena, block_ids):
+    """Stacked-layer arena (L, nb, bs, ...) + (W,) physical block ids ->
+    one row-contiguous virtual cache (L, 1, W*bs, ...).
+
+    The batch-1 companion of :func:`paged_gather` for host-orchestrated
+    admission: the prefix-sharing suffix prefill gathers the borrowed
+    prefix blocks of ONE request across all layers at once, so the
+    attention context it rebuilds is byte-identical to what the paged
+    decode lane would gather.  Sentinel ids clamp into an arbitrary
+    real block; the caller's static prefix length excludes them.
+    """
+    nb = arena.shape[1]
+    ids = jnp.clip(jnp.asarray(block_ids, jnp.int32), 0, nb - 1)
+    g = jnp.take(arena, ids, axis=1)            # (L, W, bs, ...)
+    w, bs = g.shape[1], g.shape[2]
+    return g.reshape((arena.shape[0], 1, w * bs) + arena.shape[3:])
+
+
+def paged_copy_blocks(arena, src_ids, dst_ids):
+    """Copy whole arena blocks: ``arena[:, dst_ids[i]] = arena[:, src_ids[i]]``.
+
+    The device half of copy-on-write: a writer about to touch a block
+    it does not exclusively own (refcount > 1) first duplicates the
+    posit-pattern leaves block-for-block — no dequantize round-trip,
+    the stored patterns move verbatim — then swaps its table entry to
+    the private copy.  Sentinel ids in ``dst_ids`` drop their write
+    (the usual paged no-clamp rule); ``src_ids`` sentinels clamp into
+    an arbitrary block the caller must not reference.
+    """
+    nb = arena.shape[1]
+    src = jnp.clip(jnp.asarray(src_ids, jnp.int32), 0, nb - 1)
+    dst = jnp.asarray(dst_ids, jnp.int32)
+    blocks = jnp.take(arena, src, axis=1)       # (L, n, bs, ...)
+    return arena.at[:, dst].set(blocks, mode="drop")
+
+
+def paged_pack_range(arena, kvs, tables, start, lens, *, window: int = 0):
+    """Pack ONLY positions ``[start, lens)`` of suffix KV into arena
+    blocks, preserving every other slot of the touched blocks.
+
+    ``kvs`` is (L, B, S, ...) holding the SUFFIX content: time index
+    ``t`` of ``kvs`` is absolute position ``start + t``.  Unlike
+    :func:`paged_pack` (which overwrites whole blocks, correct for
+    freshly allocated ones), the touched blocks here may already hold
+    live content — a COW copy of a shared prefix block whose tail this
+    request's recomputed tokens overwrite — so out-of-range slots are
+    read back from the arena and written unchanged.  Sentinel table
+    entries drop their scatter; the prefix-sharing admission passes the
+    sentinel for BORROWED entries so a shared block is never written
+    through this path (writes reach borrowed blocks only after COW has
+    replaced the table entry).
+    """
+    nb, bs = arena.shape[1], arena.shape[2]
+    b, s = kvs.shape[1], kvs.shape[2]
+    w = tables.shape[1]
+    lens = jnp.asarray(lens, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    start = jnp.broadcast_to(start, (b,)) if start.ndim == 0 else start
+    cpos = paged_positions(jnp.maximum(lens - 1, 0), w, bs,
+                           window=window).reshape(b, w, bs)
+    tpos = jnp.clip(cpos - start[:, None, None], 0, s - 1)
+    tpos = tpos.reshape(b, w * bs)
+    idx = tpos.reshape((1, b, w * bs) + (1,) * (kvs.ndim - 3))
+    gathered = jnp.take_along_axis(kvs, idx, axis=2)        # (L,B,W*bs,..)
+    new = gathered.reshape((kvs.shape[0], b * w, bs) + kvs.shape[3:])
+    ids = jnp.asarray(tables, jnp.int32).reshape(-1)
+    old = jnp.take(arena, jnp.clip(ids, 0, nb - 1), axis=1)  # (L,B*W,bs,..)
+    keep = ((cpos >= start[:, None, None]) &
+            (cpos < lens[:, None, None])).reshape(b * w, bs)
+    keep = keep.reshape((1, b * w, bs) + (1,) * (kvs.ndim - 3))
+    blocks = jnp.where(keep, new, old)
+    return arena.at[:, ids].set(blocks, mode="drop")
+
+
 # ---------------------------------------------------------------------------
 # Feed-forward (SwiGLU / GeGLU)
 # ---------------------------------------------------------------------------

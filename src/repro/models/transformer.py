@@ -442,6 +442,131 @@ def prefill(params, tokens, cfg: ModelConfig, visual=None, *,
     return cache, logits
 
 
+def prefill_suffix(params, tokens, cfg: ModelConfig, prefix: dict,
+                   prefix_len: int):
+    """Prefill ONLY the unmatched suffix of a prompt whose leading
+    ``prefix_len`` tokens are already resident in shared arena blocks.
+
+    ``tokens``: (1, S_suf) int32 suffix tokens at absolute positions
+    ``prefix_len .. prefix_len + S_suf - 1``.  ``prefix``: the gathered
+    prefix content leaves (``k``/``v`` dense, ``c_kv``/``k_rope`` MLA),
+    each (L, 1, P, ...) with ``P >= prefix_len`` — the tail past
+    ``prefix_len`` is block-rounding garbage and is sliced off
+    (``prefix_len`` must be static for exactly that reason).
+
+    Returns ``(suffix_kvs, logits)``: storage-dtype suffix KV leaves
+    (L, 1, S_suf, ...) ready for ``paged_pack_range``, and the (1, V)
+    logits at the prompt's last position.
+
+    Numerics: each suffix query attends over
+    ``concat(prefix_kv, suffix_kv)`` — total KV length equals the full
+    prompt length, so ``flash_attention`` picks the same KV chunking as
+    a full prefill would and every suffix position's hidden state is
+    BIT-IDENTICAL to the full-prefill path whenever the cache storage
+    dtype is the compute dtype (pinned in ``tests/test_prefix.py``).
+    With a posit KV codec the shared prefix is read back through
+    quantize->dequantize (exactly what paged decode reads), so suffix
+    activations can differ from a from-scratch prefill in the last ulp
+    — the stored prefix KV bytes themselves are identical either way.
+    """
+    from repro.core.convert import posit_to_f32
+
+    b, s_suf = tokens.shape
+    if b != 1:
+        raise ValueError(
+            f"prefill_suffix is the batch-1 admission lane, got B={b}")
+    prefix_len = int(prefix_len)
+    positions = prefix_len + jnp.arange(s_suf)[None, :]
+
+    def load(leaf):
+        leaf = leaf[:, :, :prefix_len]
+        if cfg.kv_posit:
+            leaf = posit_to_f32(leaf, L.pcfg(cfg.kv_posit))
+        return leaf.astype(L.cdtype(cfg))
+
+    x = _embed(params, tokens, cfg)
+
+    if cfg.mla:
+        def body(h, layer):
+            lp, pc, pr = layer
+            hn = L.rms_norm(lp["ln1"], h, cfg)
+            q_lat = L.rms_norm(lp["attn"]["q_norm"],
+                               L.dense(lp["attn"]["wdq"], hn, cfg), cfg)
+            q = L.dense(lp["attn"]["wuq"], q_lat, cfg).reshape(
+                b, s_suf, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
+            q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+            q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+            q = jnp.concatenate([q_nope, q_rope], -1)
+
+            dkv = L.dense(lp["attn"]["wdkv"], hn, cfg)
+            c_suf, r_suf = jnp.split(dkv, [cfg.kv_lora_rank], axis=-1)
+            c_suf = L.rms_norm(lp["attn"]["kv_norm"], c_suf, cfg)
+            r_suf = L.apply_rope(r_suf[:, :, None, :], positions,
+                                 cfg.rope_theta)[:, :, 0, :]
+
+            c_all = jnp.concatenate([pc, c_suf], axis=1)    # (1, plen, rank)
+            r_all = jnp.concatenate([pr, r_suf], axis=1)
+            plen = c_all.shape[1]
+            k_nope = L.dense(lp["attn"]["wuk"], c_all, cfg).reshape(
+                b, plen, cfg.n_heads, cfg.qk_nope_dim)
+            v = L.dense(lp["attn"]["wuv"], c_all, cfg).reshape(
+                b, plen, cfg.n_heads, cfg.v_head_dim)
+            k = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(
+                    r_all[:, :, None, :],
+                    (b, plen, cfg.n_heads, cfg.qk_rope_dim))], -1)
+            out = L.flash_attention(q, k, v, causal=True, cfg=cfg,
+                                    q_offset=prefix_len)
+            out = out.reshape(b, s_suf, cfg.n_heads * cfg.v_head_dim)
+            a = L.dense(lp["attn"]["wo"], out, cfg)
+            h = h + a
+            hh = L.rms_norm(lp["ln2"], h, cfg)
+            f = L.moe(lp["moe"], hh, cfg) if cfg.is_moe else \
+                L.mlp(lp["mlp"], hh, cfg)
+            return h + f, (_maybe_quant_kv(c_suf, cfg),
+                           _maybe_quant_kv(r_suf, cfg))
+
+        x, (c_new, r_new) = lax.scan(
+            body, x, (params["layers"],
+                      load(prefix["c_kv"]), load(prefix["k_rope"])))
+        kvs = {"c_kv": c_new, "k_rope": r_new}
+    else:
+        def body(h, layer):
+            lp, pk, pv = layer
+            hn = L.rms_norm(lp["ln1"], h, cfg)
+            q = L.dense(lp["attn"]["wq"], hn, cfg).reshape(
+                b, s_suf, cfg.n_heads, cfg.head_dim)
+            k_suf = L.dense(lp["attn"]["wk"], hn, cfg).reshape(
+                b, s_suf, cfg.n_kv_heads, cfg.head_dim)
+            v_suf = L.dense(lp["attn"]["wv"], hn, cfg).reshape(
+                b, s_suf, cfg.n_kv_heads, cfg.head_dim)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k_suf = L.apply_rope(k_suf, positions, cfg.rope_theta)
+            k = jnp.concatenate([pk, k_suf], axis=1)
+            v = jnp.concatenate([pv, v_suf], axis=1)
+            out = L.flash_attention(q, k, v, causal=True, cfg=cfg,
+                                    window=cfg.sliding_window,
+                                    q_offset=prefix_len)
+            out = out.reshape(b, s_suf, cfg.n_heads * cfg.head_dim)
+            a = L.dense(lp["attn"]["wo"], out, cfg)
+            h = h + a
+            hh = L.rms_norm(lp["ln2"], h, cfg)
+            f = L.moe(lp["moe"], hh, cfg) if cfg.is_moe else \
+                L.mlp(lp["mlp"], hh, cfg)
+            return h + f, (_maybe_quant_kv(k_suf, cfg),
+                           _maybe_quant_kv(v_suf, cfg))
+
+        x, (k_new, v_new) = lax.scan(
+            body, x, (params["layers"],
+                      load(prefix["k"]), load(prefix["v"])))
+        kvs = {"k": k_new, "v": v_new}
+
+    x = L.rms_norm(params["final_norm"], x, cfg)
+    last = x[:, -1:, :]
+    logits = (last @ _unembed_weight(params, cfg).astype(x.dtype))
+    return kvs, logits[:, 0, :].astype(jnp.float32)
+
+
 def _decode_attn_dense(p, x, k_cache, v_cache, pos, lens, cfg: ModelConfig):
     b = x.shape[0]
     capacity = k_cache.shape[1]

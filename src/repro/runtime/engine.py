@@ -228,6 +228,84 @@ class Engine:
         return cache, logits, lens
 
     # ------------------------------------------------------------------
+    # prefix sharing: suffix prefill + COW block copies (paged only)
+    # ------------------------------------------------------------------
+
+    def _suffix_fn(self, plen: int, prefix_len: int):
+        from repro.models import layers as L
+        from repro.models import transformer as T
+        cfg = self.cfg
+        win = T._paged_window(cfg)
+        keys = ("c_kv", "k_rope") if cfg.mla else ("k", "v")
+
+        def run(params, cache, tokens, gather_ids, table):
+            prefix = {k: L.paged_gather_layers(cache[k], gather_ids)
+                      for k in keys}
+            kvs, logits = T.prefill_suffix(params, tokens, cfg, prefix,
+                                           prefix_len)
+            lens = jnp.full((1,), plen, jnp.int32)
+            out = dict(cache)
+            for k in keys:
+                out[k] = L.paged_pack_range(
+                    cache[k], kvs[k], table[None], prefix_len, lens,
+                    window=win)
+            return out, logits
+
+        return jax.jit(run)
+
+    def prefill_suffix(self, prompt, cache, gather_ids, write_table,
+                       prefix_len: int):
+        """Prefix-sharing admission: prefill ONLY ``prompt[prefix_len:]``
+        of a batch-1 request whose leading tokens are resident in shared
+        arena blocks, writing the suffix KV straight into ``cache``'s
+        arena leaves.
+
+        ``gather_ids``: (Wp,) physical ids of the borrowed prefix blocks
+        (``Wp * block_size >= prefix_len``); ``write_table``: the row's
+        full (W,) table with every still-borrowed entry replaced by the
+        sentinel so shared blocks can never take a write through this
+        path.  Returns ``(cache, logits)`` with updated content leaves
+        and the (1, V) last-position logits.  Jit-specialized per
+        (prompt length, prefix length) pair, like admission prefill is
+        per prompt length.
+        """
+        if not self.paged:
+            raise ValueError("prefill_suffix needs Engine(paged=True)")
+        plen = len(prompt)
+        prefix_len = int(prefix_len)
+        if not 0 < prefix_len <= plen - 2:
+            raise ValueError(
+                f"prefix_len {prefix_len} outside [1, plen-2={plen - 2}]"
+                " (>= 2 suffix tokens keep the matmul shapes off the "
+                "bitwise-divergent length-1 path)")
+        toks = jnp.asarray(prompt, jnp.int32)[None, prefix_len:]
+        key = ("suffix", plen, prefix_len, len(gather_ids))
+        if key not in self._prefill_jit:
+            self._prefill_jit[key] = self._suffix_fn(plen, prefix_len)
+        return self._prefill_jit[key](
+            self.params, cache, toks,
+            jnp.asarray(gather_ids, jnp.int32),
+            jnp.asarray(write_table, jnp.int32))
+
+    def copy_blocks(self, cache, src_ids, dst_ids):
+        """COW device half: duplicate arena blocks ``src_ids -> dst_ids``
+        across every content leaf (posit patterns move verbatim, no
+        dequantize round-trip).  Jit-specialized per copy count."""
+        from repro.models import layers as L
+        keys = ("c_kv", "k_rope") if self.cfg.mla else ("k", "v")
+        key = ("copy", len(src_ids))
+        if key not in self._decode_jit:
+            def run(cache, src, dst):
+                out = dict(cache)
+                for k in keys:
+                    out[k] = L.paged_copy_blocks(cache[k], src, dst)
+                return out
+            self._decode_jit[key] = jax.jit(run)
+        return self._decode_jit[key](
+            cache, jnp.asarray(src_ids, jnp.int32),
+            jnp.asarray(dst_ids, jnp.int32))
+
+    # ------------------------------------------------------------------
     # decode: one lax.scan == one compiled call for the whole generation
     # ------------------------------------------------------------------
 

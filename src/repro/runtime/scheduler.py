@@ -49,6 +49,29 @@ free blocks.  Peak cache memory is the blocks actually resident
 token streams are identical to the compaction scheduler's
 (``tests/test_paged.py``).
 
+Prefix caching (``prefix_cache=True``, paged only) deduplicates shared
+prompt prefixes across requests: every fully-written prompt block is
+content-addressed in a :class:`kvcache.PrefixIndex` (rolling hash of
+its token ids, chained so a hash identifies the whole prefix up to that
+block), and admission first walks the index — matched leading blocks
+are BORROWED (``BlockPool.share``) instead of recomputed, only the
+unmatched suffix runs through ``Engine.prefill_suffix`` (always >= 2
+tokens, keeping the matmuls on the same gemm path a full prefill
+lowers to).  Writes never land in a shared block: admission
+copy-on-writes the matched blocks the suffix overlaps, and a pre-chunk
+pass COWs window-lane ring slots about to recycle a shared block.  The
+index holds one pool reference per registered block so prefixes
+survive their owner's retirement; index-only blocks (refcount 1) are
+evicted LRU-first when admission needs physical capacity.  Worst-case
+reservation stays sound: a sharer's debt is ``worst - owned`` minus
+the dense-lane borrowed blocks append-only decode can never touch,
+and window rows pre-reserve one COW per registered/borrowed ring slot.
+Greedy token streams are identical to the non-sharing paged path
+(``tests/test_prefix.py``) when the KV storage dtype is the compute
+dtype; with a posit KV codec the borrowed prefix is read back through
+the codec (exactly what decode reads), so suffix logits can differ in
+the last ulp from a from-scratch prefill's.
+
 Sampling: greedy decoding is deterministic and token-identical to
 isolated generation.  With ``temperature > 0`` the scheduler is still
 deterministic for a fixed seed, but the PRNG stream interleaves rows
@@ -122,10 +145,14 @@ class Scheduler:
     ``n_slots`` is the pool width (the compiled batch size), ``chunk_size``
     the number of decode steps between scheduling decisions.  Larger
     chunks amortize host work; smaller chunks admit/retire sooner.
+    ``prefix_cache=True`` (paged engines only) switches on
+    content-addressed prefix sharing with copy-on-write block tables —
+    see the module docstring for the full contract.
     """
 
     def __init__(self, engine: Engine, *, n_slots: int,
-                 chunk_size: int = 8, eos_id: Optional[int] = None):
+                 chunk_size: int = 8, eos_id: Optional[int] = None,
+                 prefix_cache: bool = False):
         if engine.cfg.family != "transformer":
             raise ValueError(
                 "continuous batching needs per-row decode positions, "
@@ -141,6 +168,11 @@ class Scheduler:
         self.chunk_size = int(chunk_size)
         self.eos_id = eos_id
         self.paged = bool(getattr(engine, "paged", False))
+        self.prefix_cache = bool(prefix_cache)
+        if self.prefix_cache and not self.paged:
+            raise ValueError(
+                "prefix_cache=True needs Engine(paged=True): sharing "
+                "is expressed through block-table entries")
         fam = get_family(engine.cfg)
         if self.paged:
             from repro.models import transformer as T
@@ -156,12 +188,23 @@ class Scheduler:
             self._tables = np.full(
                 (self.n_slots, self.table_width), self.n_blocks, np.int32)
             self._row_blocks: list = [[] for _ in range(self.n_slots)]
+            # borrowed table entries: slot index -> shared block id; the
+            # row holds one pool reference per entry but must COW before
+            # ever writing through it (empty unless prefix_cache)
+            self._row_borrowed: list = [{} for _ in range(self.n_slots)]
+            self._row_used = [0] * self.n_slots   # populated table slots
             self._worst = [0] * self.n_slots
             self._outstanding = 0      # reserved-but-unallocated blocks
-            # high-water mark of allocated + reserved blocks: an arena
-            # of this size replays the same trace with zero deferrals
-            # (the benchmark's capacity-planning number)
+            # high-water mark of PHYSICAL allocated + reserved blocks:
+            # an arena of this size replays the same trace with zero
+            # deferrals (the benchmark's capacity-planning number).
+            # peak_logical is the same mark counting every reference —
+            # what a non-sharing pool would have needed; the gap is the
+            # prefix-dedup win.
             self.peak_committed = 0
+            self.peak_logical = 0
+            if self.prefix_cache:
+                self.index = kvc.PrefixIndex()
             self._adopt_paged = jax.jit(
                 kvc.paged_adopt_row,
                 static_argnames=("window", "src_ring"))
@@ -169,6 +212,12 @@ class Scheduler:
         else:
             self.cache = fam.init_cache(engine.cfg, self.n_slots,
                                         engine.max_len)
+        # prefix-caching observability (stay zero without prefix_cache)
+        self.prefill_tokens = 0        # tokens actually run through prefill
+        self.prefix_hits = 0           # admissions that borrowed blocks
+        self.prefix_matched_tokens = 0  # prompt tokens served from cache
+        self.n_cow = 0                 # copy-on-write block duplications
+        self.n_evicted = 0             # index blocks reclaimed under pressure
         self._slots: list = [None] * self.n_slots
         self._queue: deque = deque()
         self._cur_tok = np.zeros((self.n_slots,), np.int32)
@@ -212,6 +261,10 @@ class Scheduler:
                 f"{self.engine.max_len}")
         if self.paged:
             worst = self._worst_blocks(len(prompt), max_new_tokens)
+            if self.prefix_cache and self.engine.window_lane and \
+                    self._share_cap(len(prompt)):
+                # registered ring blocks each pre-reserve one COW copy
+                worst += len(prompt) // self.block_size
             if worst > self.n_blocks:
                 raise ValueError(
                     f"request needs up to {worst} cache blocks > block "
@@ -254,10 +307,123 @@ class Scheduler:
         return self.engine._row_blocks_needed(
             prompt_len, max_new - 1 + self.chunk_size)
 
+    def _share_cap(self, plen: int) -> bool:
+        """Is a prompt of ``plen`` tokens eligible for prefix sharing /
+        registration?  The window lane shares only prompts that fit the
+        window: then every logical block is resident at its identity
+        ring slot, so donor and sharer agree on the slot -> position
+        mapping (ring recycling of shared blocks is handled by the
+        pre-chunk COW pass)."""
+        if not self._window:
+            return True
+        return plen <= min(self.engine.max_len, self._window)
+
+    def _evictable_count(self, exclude=()) -> int:
+        """Index blocks whose ONLY reference is the index's — physical
+        capacity admission may reclaim (minus ``exclude``: the blocks
+        the current match is about to pin)."""
+        ex = {int(i) for i in exclude}
+        return sum(1 for b in self.index.blocks_lru()
+                   if b not in ex and self.pool.refcount(b) == 1)
+
+    def _take_blocks(self, n: int) -> list:
+        """``pool.alloc(n)``, evicting least-recently-matched index-only
+        blocks first if the free list is short.  Callers have already
+        checked ``n_free + evictable`` covers their reservation."""
+        if n > self.pool.n_free:
+            for bid in self.index.blocks_lru():
+                if self.pool.n_free >= n:
+                    break
+                if self.pool.refcount(bid) == 1:
+                    self.index.pop_block(bid)
+                    self.pool.free([bid])
+                    self.n_evicted += 1
+        return self.pool.alloc(n)
+
+    def _match_prefix(self, prompt) -> list:
+        """Longest chain of resident index blocks covering the prompt's
+        leading full blocks; returns their physical ids."""
+        ids = []
+        for h in kvc.prefix_block_hashes(prompt, self.block_size):
+            bid = self.index.get(h)
+            if bid is None:
+                break
+            ids.append(int(bid))
+        return ids
+
+    def _register_row(self, prompt, row: int):
+        """Content-address this row's fully-written prompt blocks.  Each
+        newly registered block gets one extra pool reference HELD BY THE
+        INDEX, so the prefix outlives the row; window rows additionally
+        grow their reservation by one block per registration, because
+        ring recycling will COW each shared slot at most once."""
+        plen = len(prompt)
+        if not self._share_cap(plen):
+            return
+        n_reg = 0
+        for i, h in enumerate(kvc.prefix_block_hashes(
+                prompt, self.block_size)):
+            if self.index.get(h) is not None:
+                continue               # first writer wins
+            bid = int(self._tables[row, i])
+            if bid == self.n_blocks:
+                continue
+            self.index.put(h, bid)
+            self.pool.share([bid])
+            n_reg += 1
+        if n_reg and self.engine.window_lane:
+            self._worst[row] += n_reg
+            self._outstanding += n_reg
+
+    def _row_debt(self, row: int) -> int:
+        """Blocks still reserved (but not yet drawn) for a live row:
+        worst-case minus owned.  Dense-lane borrowed entries are
+        excluded — append-only decode can never write into a block that
+        lies wholly before the suffix, so they need no COW reserve;
+        window-lane borrowed entries keep theirs (ring recycling COWs
+        each at most once)."""
+        debt = self._worst[row] - len(self._row_blocks[row])
+        if not self.engine.window_lane:
+            debt -= len(self._row_borrowed[row])
+        return debt
+
+    def _note_peaks(self):
+        # physical commitment excludes index-only blocks: those are
+        # droppable cache (_take_blocks evicts them on demand), so an
+        # arena of peak_committed still replays the trace deferral-free
+        evictable = self._evictable_count() if self.prefix_cache else 0
+        self.peak_committed = max(
+            self.peak_committed,
+            self.pool.in_use - evictable + self._outstanding)
+        self.peak_logical = max(
+            self.peak_logical,
+            self.pool.logical_in_use + self._outstanding)
+
     def _admit_paged(self, req: Request, row: int):
         plen = len(req.prompt)
         worst = self._worst_blocks(plen, req.max_new_tokens)
-        if self.pool.n_free - self._outstanding < worst:
+        matched, suffix_start = [], 0
+        if self.prefix_cache and self._share_cap(plen):
+            matched = self._match_prefix(req.prompt)
+            # always recompute >= 2 trailing tokens: the last is needed
+            # for logits anyway, and a length-2 suffix keeps every
+            # matmul on the same gemm path a full prefill lowers to
+            # (length-1 falls to a bitwise-divergent matvec)
+            suffix_start = min(len(matched) * self.block_size, plen - 2)
+        if matched and suffix_start > 0:
+            return self._admit_prefix(req, row, worst, matched,
+                                      suffix_start)
+
+        # reservation check: COW/extension draws must never find the
+        # pool empty.  Under prefix caching, index-only blocks count as
+        # available — _take_blocks evicts them on demand; window rows
+        # additionally pre-reserve one COW per block they may register.
+        head = plen // self.block_size if (
+            self.prefix_cache and self.engine.window_lane and
+            self._share_cap(plen)) else 0
+        avail = self.pool.n_free + (
+            self._evictable_count() if self.prefix_cache else 0)
+        if avail - self._outstanding < worst + head:
             return False               # wait for retirements' blocks
         # batch-1 LINEAR prefill: the same jitted path (and therefore
         # the same KV values) an isolated Engine.generate would run;
@@ -267,7 +433,8 @@ class Scheduler:
                                                    paged=False)
         now = self.table_width if self.engine.window_lane else \
             -(-plen // self.block_size)
-        ids = self.pool.alloc(now)
+        ids = self._take_blocks(now) if self.prefix_cache \
+            else self.pool.alloc(now)
         block_ids = np.full((self.table_width,), self.n_blocks, np.int32)
         block_ids[:now] = ids
         cap = min(self.engine.max_len, self._window) if self._window \
@@ -278,32 +445,142 @@ class Scheduler:
             src_ring=plen > cap)
         self._tables[row] = block_ids
         self._row_blocks[row] = ids
+        self._row_borrowed[row] = {}
+        self._row_used[row] = now
         self._worst[row] = worst
         self._outstanding += worst - now
-        self.peak_committed = max(
-            self.peak_committed, self.pool.in_use + self._outstanding)
+        self.prefill_tokens += plen
+        if self.prefix_cache:
+            self._register_row(req.prompt, row)
+        self._note_peaks()
         tok0, self.engine._key = sample_token(
             logits, self.engine._key, self.engine.temperature)
         return int(np.asarray(tok0)[0])
 
+    def _admit_prefix(self, req: Request, row: int, worst: int,
+                      matched: list, suffix_start: int):
+        """Admission with a prefix hit: point leading table entries at
+        the matched resident blocks, COW the matched blocks the suffix
+        recomputation will write into, and prefill ONLY
+        ``prompt[suffix_start:]`` against the gathered prefix KV."""
+        plen = len(req.prompt)
+        bs = self.block_size
+        avail = self.pool.n_free + self._evictable_count(exclude=matched)
+        head = plen // bs if self.engine.window_lane else 0
+        if avail - self._outstanding < worst + head:
+            return False
+        used = self.table_width if self.engine.window_lane else \
+            -(-plen // bs)
+        cow_from = suffix_start // bs  # first slot the suffix writes
+        n_borrow = min(len(matched), cow_from)
+        # pin the whole match BEFORE any eviction can reclaim it
+        self.pool.share(matched)
+        cow_slots = list(range(cow_from, len(matched)))
+        fresh = self._take_blocks(used - len(matched) + len(cow_slots))
+        block_ids = np.full((self.table_width,), self.n_blocks, np.int32)
+        block_ids[:len(matched)] = matched
+        for s, nid in zip(cow_slots, fresh[:len(cow_slots)]):
+            block_ids[s] = nid
+        block_ids[len(matched):used] = fresh[len(cow_slots):]
+        if cow_slots:
+            # duplicate the pattern leaves block-for-block, then drop
+            # our reference to the shared originals (the index keeps
+            # them resident for future matches)
+            self.cache = self.engine.copy_blocks(
+                self.cache, [matched[s] for s in cow_slots],
+                fresh[:len(cow_slots)])
+            self.pool.release([matched[s] for s in cow_slots])
+            self.n_cow += len(cow_slots)
+        self._tables[row] = block_ids
+        self.cache = dict(
+            self.cache,
+            block_tables=jnp.asarray(self._tables),
+            lens=jnp.asarray(self.cache["lens"],
+                             jnp.int32).at[row].set(plen))
+        # gather table covers [0, suffix_start): borrowed originals plus
+        # the COW copy of the boundary block (whose leading slots hold
+        # copied prefix content); the write table hides every
+        # still-borrowed entry behind the sentinel so a shared block can
+        # never take a write
+        wp = -(-suffix_start // bs)
+        write_table = block_ids.copy()
+        write_table[:n_borrow] = self.n_blocks
+        self.cache, logits = self.engine.prefill_suffix(
+            req.prompt, self.cache, block_ids[:wp], write_table,
+            suffix_start)
+        self._row_blocks[row] = list(fresh)
+        self._row_borrowed[row] = {s: int(matched[s])
+                                   for s in range(n_borrow)}
+        self._row_used[row] = used
+        self._worst[row] = worst
+        self._outstanding += self._row_debt(row)
+        self.prefix_hits += 1
+        self.prefix_matched_tokens += suffix_start
+        self.prefill_tokens += plen - suffix_start
+        self._register_row(req.prompt, row)
+        self._note_peaks()
+        tok0, self.engine._key = sample_token(
+            logits, self.engine._key, self.engine.temperature)
+        return int(np.asarray(tok0)[0])
+
+    def _cow_window_rows(self) -> bool:
+        """Pre-chunk COW pass (window lane + prefix_cache only): the
+        ring recycles blocks in place, so the next chunk's writes may
+        land in blocks that are shared (borrowed from a donor, or this
+        row's own registered prefix).  Duplicate each such block and
+        swap the table entry first; the admission-time reservation
+        covers every copy."""
+        src, dst = [], []
+        w, bs = self.table_width, self.block_size
+        for i, slot in enumerate(self._slots):
+            if slot is None or slot.done:
+                continue
+            lo = slot.lens // bs
+            hi = (slot.lens + self.chunk_size - 1) // bs
+            for q in range(lo, hi + 1):
+                s = q % w
+                bid = int(self._tables[i, s])
+                if bid == self.n_blocks or self.pool.refcount(bid) <= 1:
+                    continue
+                nid, = self._take_blocks(1)
+                src.append(bid)
+                dst.append(nid)
+                self._tables[i, s] = nid
+                self._row_blocks[i].append(nid)
+                self._outstanding -= 1
+                if self._row_borrowed[i].pop(s, None) is None:
+                    # own registered block: index keeps the original
+                    self._row_blocks[i].remove(bid)
+                self.pool.release([bid])
+                self.n_cow += 1
+        if src:
+            self.cache = self.engine.copy_blocks(self.cache, src, dst)
+            return True
+        return False
+
     def _ensure_blocks(self):
         """Extend each live dense row's table to cover the next chunk's
-        writes (window rows never grow: their ring recycles in place).
-        The admission-time reservation guarantees the pool can serve
-        this."""
+        writes (window rows never grow: their ring recycles in place —
+        but under prefix caching recycled SHARED blocks are first
+        duplicated by the COW pass).  The admission-time reservation
+        guarantees the pool can serve this."""
         changed = False
         for i, slot in enumerate(self._slots):
             if slot is None or slot.done or self.engine.window_lane:
                 continue
             need = -(-min(slot.lens + self.chunk_size,
                           self.engine.max_len) // self.block_size)
-            have = len(self._row_blocks[i])
+            have = self._row_used[i]
             if need > have:
-                ids = self.pool.alloc(need - have)
+                ids = self._take_blocks(need - have) if self.prefix_cache \
+                    else self.pool.alloc(need - have)
                 self._tables[i, have:need] = ids
                 self._row_blocks[i].extend(ids)
+                self._row_used[i] = need
                 self._outstanding -= len(ids)
                 changed = True
+        if self.prefix_cache and self.engine.window_lane:
+            changed |= self._cow_window_rows()
         if changed:
             self.cache = dict(self.cache,
                               block_tables=jnp.asarray(self._tables))
@@ -358,10 +635,16 @@ class Scheduler:
             self._slots[i] = None
             self.n_retired += 1
             if self.paged:
+                # drop the row's references: owned blocks physically
+                # reclaim unless the prefix index still holds them;
+                # borrowed blocks just decref back to their other owners
+                self._outstanding -= self._row_debt(i)
                 self.pool.free(self._row_blocks[i])
-                self._outstanding -= \
-                    self._worst[i] - len(self._row_blocks[i])
+                if self._row_borrowed[i]:
+                    self.pool.release(list(self._row_borrowed[i].values()))
                 self._row_blocks[i] = []
+                self._row_borrowed[i] = {}
+                self._row_used[i] = 0
                 self._worst[i] = 0
                 self._tables[i] = self.n_blocks          # sentinel
         if done_mask.any():
@@ -376,7 +659,20 @@ class Scheduler:
         return completions
 
     def step(self):
-        """One scheduling round; returns the requests completed in it."""
+        """One scheduling round; returns the requests completed in it.
+
+        Order: admit queued prompts into free slots (FIFO; a paged
+        admission defers until ``n_free + evictable - outstanding``
+        covers its worst-case block demand) -> extend live dense rows'
+        tables / COW window-lane ring slots about to recycle a shared
+        block -> ONE fixed-size decode chunk (single compiled dispatch,
+        shapes never change) -> retire finished rows (decref their
+        blocks; prefix-registered blocks stay resident under the
+        index's reference).  Invariants pinned by tests: greedy token
+        streams identical to isolated generation and to the
+        non-sharing paged path; writes reach a block only while its
+        refcount is 1; reservation never lets extension or COW find
+        the pool empty."""
         self._admit()
         active = np.array(
             [s is not None and not s.done for s in self._slots], bool)

@@ -1,0 +1,56 @@
+"""Docs-freshness checks.
+
+``docs/ARCHITECTURE.md`` is the layer map for the serving stack; it is
+only useful while it tells the truth.  These tests parse every
+backticked repo path out of the document (layer-map tables included)
+and assert each one exists on disk — renaming or deleting a module
+without updating the doc fails CI — and pin the README link that makes
+the doc discoverable.
+"""
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+ARCH = REPO / "docs" / "ARCHITECTURE.md"
+
+# `src/repro/runtime/engine.py`, `tests/test_paged.py::test_x`,
+# `compress/kvcache.py:BlockPool` — capture the path part only.
+_PATH_RE = re.compile(r"`([\w.-]+(?:/[\w.-]+)+\.(?:py|md|json|yml|toml))")
+
+
+def _doc_paths():
+    paths = sorted(set(_PATH_RE.findall(ARCH.read_text())))
+    assert paths, "ARCHITECTURE.md names no modules — parser broken?"
+    return paths
+
+
+def test_architecture_doc_exists_and_covers_the_stack():
+    text = ARCH.read_text()
+    # the layer map must name the full serving stack, bottom to top
+    for mod in [
+        "src/repro/compress/kvcache.py",
+        "src/repro/models/layers.py",
+        "src/repro/models/transformer.py",
+        "src/repro/runtime/engine.py",
+        "src/repro/runtime/scheduler.py",
+        "src/repro/launch/serve.py",
+        "benchmarks/bench_serve.py",
+    ]:
+        assert mod in text, f"layer map is missing {mod}"
+
+
+def test_every_module_named_in_architecture_exists():
+    missing = []
+    for p in _doc_paths():
+        if not ((REPO / p).exists() or (REPO / "src" / "repro" / p).exists()):
+            missing.append(p)
+    assert not missing, (
+        "ARCHITECTURE.md names paths that do not exist (stale doc or "
+        f"renamed module): {missing}"
+    )
+
+
+def test_readme_links_architecture_and_prefix_caching():
+    readme = (REPO / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "prefix" in readme.lower()

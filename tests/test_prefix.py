@@ -1,0 +1,236 @@
+"""Prefix caching with copy-on-write block tables.
+
+Three layers of pinning:
+
+* ``BlockPool`` refcount property tests — random alloc/share/release
+  traces never double-free, never leak, and physical ``in_use`` always
+  equals the number of DISTINCT live blocks while ``logical_in_use``
+  counts references.
+* ``PrefixIndex`` + rolling-hash contract — chained hashes identify
+  whole prefixes, first-writer-wins registration, LRU eviction order.
+* End-to-end token identity — on dense, MLA and sliding-window lanes,
+  a scheduler with ``prefix_cache=True`` must emit EXACTLY the token
+  streams the non-sharing paged scheduler emits (f32 KV storage: the
+  suffix prefill is bitwise-identical to a full prefill) while holding
+  strictly fewer peak physical blocks and prefilling strictly fewer
+  tokens on a shared-prefix trace.  COW divergence after the shared
+  prefix must never leak one request's tokens into another's blocks.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.compress import kvcache as kvc
+from repro.models import get_family
+from repro.runtime.engine import Engine
+from repro.runtime.scheduler import Scheduler
+
+from test_paged import _cfg, _params
+
+LANES = ["dense", "mla", "window"]
+
+
+# ---------------------------------------------------------------------------
+# BlockPool refcounting (property-style, stdlib random)
+# ---------------------------------------------------------------------------
+
+def test_block_pool_refcount_random_traces():
+    """Random alloc/share/release traces: physical in_use == number of
+    unique referenced blocks, logical_in_use == sum of refcounts,
+    conservation holds, releases reclaim exactly at refcount zero, and
+    double frees raise."""
+    rng = random.Random(99)
+    for _ in range(40):
+        n_blocks = rng.randint(1, 48)
+        pool = kvc.BlockPool(n_blocks)
+        refs: dict = {}                 # block id -> live refcount
+        for _ in range(300):
+            assert pool.n_free + pool.in_use == n_blocks
+            assert pool.in_use == len(refs)
+            assert pool.logical_in_use == sum(refs.values())
+            for b, r in refs.items():
+                assert pool.refcount(b) == r
+            op = rng.random()
+            if op < 0.35 and pool.n_free:
+                n = rng.randint(1, pool.n_free)
+                for b in pool.alloc(n):
+                    assert b not in refs          # never double-handed
+                    refs[b] = 1
+            elif op < 0.6 and refs:
+                b = rng.choice(list(refs))
+                pool.share([b])
+                refs[b] += 1
+            elif refs:
+                b = rng.choice(list(refs))
+                pool.release([b])
+                refs[b] -= 1
+                if refs[b] == 0:
+                    del refs[b]
+                    # now physically free: another release must raise
+                    with pytest.raises(ValueError):
+                        pool.free([b])
+        assert pool.peak_in_use <= n_blocks
+        assert pool.peak_logical >= pool.peak_in_use
+
+
+def test_block_pool_share_requires_residency():
+    pool = kvc.BlockPool(4)
+    with pytest.raises(ValueError):
+        pool.share([0])                 # not allocated yet
+    (b,) = pool.alloc(1)
+    pool.share([b])
+    pool.release([b])
+    assert pool.in_use == 1             # still held once
+    pool.free([b])
+    assert pool.in_use == 0 and pool.n_free == 4
+
+
+def test_block_pool_alloc_skips_shared_blocks():
+    """A block stays out of the free list while ANY reference lives."""
+    pool = kvc.BlockPool(3)
+    ids = pool.alloc(3)
+    pool.share([ids[0]])
+    pool.free(ids)                      # ids[0] survives via the share
+    assert pool.n_free == 2
+    assert set(pool.alloc(2)).isdisjoint({ids[0]})
+
+
+# ---------------------------------------------------------------------------
+# rolling hashes + PrefixIndex
+# ---------------------------------------------------------------------------
+
+def test_prefix_hashes_chain_full_blocks_only():
+    toks = list(range(10))
+    hs = kvc.prefix_block_hashes(toks, 4)
+    assert len(hs) == 2                 # 10 // 4, trailing partial unhashed
+    # hash i commits to the WHOLE prefix, not just block i
+    other = [99] + toks[1:]
+    hs2 = kvc.prefix_block_hashes(other, 4)
+    assert hs2[0] != hs[0] and hs2[1] != hs[1]
+    # agreement up to block 0 only
+    mixed = toks[:4] + [7, 7, 7, 7, 7, 7]
+    hs3 = kvc.prefix_block_hashes(mixed, 4)
+    assert hs3[0] == hs[0] and hs3[1] != hs[1]
+
+
+def test_prefix_index_lru_and_first_writer_wins():
+    idx = kvc.PrefixIndex()
+    assert idx.put("a", 1) and idx.put("b", 2)
+    assert not idx.put("a", 3)          # first writer wins
+    with pytest.raises(ValueError):
+        idx.put("c", 1)                 # one hash per block
+    assert idx.get("a") == 1            # bumps "a" to MRU
+    assert idx.blocks_lru() == [2, 1]
+    assert idx.pop_block(2) == "b"
+    assert idx.get("b") is None
+    assert len(idx) == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: sharing must be invisible to the tokens
+# ---------------------------------------------------------------------------
+
+def _run_trace(cfg, params, prompts, *, prefix_cache, max_new, bs, nb,
+               max_len, n_slots=2, chunk=4):
+    eng = Engine(cfg, params, max_len=max_len, paged=True,
+                 block_size=bs, n_blocks=nb)
+    sched = Scheduler(eng, n_slots=n_slots, chunk_size=chunk,
+                      prefix_cache=prefix_cache)
+    rids = [sched.submit(p, max_new) for p in prompts]
+    done = sched.run(max_rounds=500)
+    toks = {r: done[r].tokens.tolist() for r in rids}
+    return toks, sched
+
+
+def _lane_trace(lane, rng):
+    """Shared-prefix trace sized to each lane's sharing regime (window
+    sharing needs the whole prompt inside the window)."""
+    if lane == "window":
+        shared = [int(t) for t in rng.integers(0, 200, 6)]
+        prompts = [shared + [int(t) for t in rng.integers(0, 200, 2)]
+                   for _ in range(4)]
+        return prompts, dict(max_new=10, bs=2, nb=64, max_len=64)
+    shared = [int(t) for t in rng.integers(0, 200, 40)]
+    prompts = [shared + [int(t) for t in rng.integers(0, 200, 6)]
+               for _ in range(4)]
+    return prompts, dict(max_new=12, bs=8, nb=128, max_len=96)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("lane", LANES)
+def test_prefix_sharing_token_identical(lane):
+    """COW divergence: requests borrowing a shared prefix emit exactly
+    the tokens the non-sharing paged scheduler emits, on every lane."""
+    cfg = _cfg(lane)
+    params = _params(cfg)
+    prompts, kw = _lane_trace(lane, np.random.default_rng(3))
+    base, sb = _run_trace(cfg, params, prompts, prefix_cache=False, **kw)
+    shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True, **kw)
+    assert shared == base
+    assert ss.prefix_hits >= len(prompts) - 1
+    assert ss.prefill_tokens < sb.prefill_tokens
+    if lane != "window":
+        # dense lanes: dedup must show up as PHYSICAL savings (window
+        # trades memory for prefill work: ring COW pre-reserves copies)
+        assert ss.peak_committed < sb.peak_committed
+    assert ss.peak_logical >= ss.peak_committed
+
+
+@pytest.mark.slow
+def test_exact_duplicate_prompts_trigger_admission_cow():
+    """A block-aligned full-prompt match still recomputes >= 2 tokens;
+    their KV writes land in a COW copy, never the shared block."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(5)
+    p0 = [int(t) for t in rng.integers(0, 200, 24)]       # 24 % 4 == 0
+    prompts = [p0, list(p0), list(p0)]
+    kw = dict(max_new=8, bs=4, nb=64, max_len=64)
+    base, _ = _run_trace(cfg, params, prompts, prefix_cache=False, **kw)
+    shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True, **kw)
+    assert shared == base
+    assert ss.n_cow >= 2                # one COW per duplicate admission
+
+
+@pytest.mark.slow
+def test_prefix_eviction_under_pressure_token_identical():
+    """Distinct prefix families on a tight pool: admissions evict
+    index-only blocks LRU-first, streams stay identical, and the
+    drained pool holds exactly the index's references."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(11)
+    fams = [[int(t) for t in rng.integers(0, 200, 24)] for _ in range(3)]
+    prompts = [fams[i % 3] + [int(t) for t in rng.integers(0, 200, 5)]
+               for i in range(9)]
+    kw = dict(max_new=8, bs=4, nb=24, max_len=64)
+    base, _ = _run_trace(cfg, params, prompts, prefix_cache=False, **kw)
+    shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True, **kw)
+    assert shared == base
+    assert ss.n_evicted > 0
+    assert ss.pool.in_use == len(ss.index)
+    for b in ss.index.blocks_lru():
+        assert ss.pool.refcount(b) == 1
+
+
+@pytest.mark.slow
+def test_window_ring_recycling_cows_shared_blocks():
+    """Window lane: decode recycles ring slots holding shared blocks;
+    the pre-chunk COW pass must duplicate them first (streams identical,
+    COWs actually fire)."""
+    cfg = _cfg("window")
+    params = _params(cfg)
+    prompts, kw = _lane_trace("window", np.random.default_rng(3))
+    base, _ = _run_trace(cfg, params, prompts, prefix_cache=False, **kw)
+    shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True, **kw)
+    assert shared == base
+    assert ss.n_cow > 0
+
+
+def test_prefix_cache_requires_paged_engine():
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    eng = Engine(cfg, params, max_len=32)
+    with pytest.raises(ValueError, match="paged"):
+        Scheduler(eng, n_slots=1, prefix_cache=True)
