@@ -41,7 +41,11 @@ headroom, ring-free dense decode, both posit codecs, and the
 continuous-batching scheduler end to end); ``--paged`` runs ONLY the
 paged-vs-compaction comparison (the fast lane's paged smoke), and
 ``--prefix-share`` adds (or alone, runs only) the prefix-caching
-comparison.
+comparison.  ``--sanitize`` arms the arena sanitizer on the paged and
+prefix passes (``BlockPool(sanitize=True)`` misuse checks, pre-chunk
+write gates, poisoned reclaims) and asserts the traces end leak-free —
+the CI smoke runs with it so every PR replays the serving trace under
+the sanitizer.
 """
 from __future__ import annotations
 
@@ -202,7 +206,7 @@ def run_batching_comparison(smoke: bool = False):
     return rows
 
 
-def run_paged_comparison(smoke: bool = False):
+def run_paged_comparison(smoke: bool = False, sanitize: bool = False):
     """Paged (block-table) vs compaction scheduler on one ragged trace.
 
     Two paged passes: the first (worst-case arena, no deferrals
@@ -241,15 +245,20 @@ def run_paged_comparison(smoke: bool = False):
     drive_trace(probe, trace)
     n_blocks = probe.peak_committed
 
-    # pass 2: right-sized arena (identical scheduling, fewer bytes)
+    # pass 2: right-sized arena (identical scheduling, fewer bytes);
+    # --sanitize arms the arena sanitizer here, asserting the trace is
+    # leak-free under the tightest pool the trace admits
     pag = Scheduler(Engine(cfg, params, max_len=max_len, seed=0,
                            paged=True, block_size=block,
-                           n_blocks=n_blocks),
+                           n_blocks=n_blocks, sanitize=sanitize),
                     n_slots=n_slots, chunk_size=chunk)
     t0 = time.perf_counter()
     done_p, _ = drive_trace(pag, trace)
     p_wall = time.perf_counter() - t0
     p_bytes = cache_report(pag.cache)["bytes"]
+    if sanitize:
+        assert pag.n_leaked == 0 and not pag.leak_report(), \
+            f"sanitizer found leaked arena blocks: {pag.leak_report()}"
 
     assert done_l.keys() == done_p.keys()
     for rid in done_l:
@@ -278,7 +287,7 @@ def run_paged_comparison(smoke: bool = False):
     ]
 
 
-def run_prefix_comparison(smoke: bool = False):
+def run_prefix_comparison(smoke: bool = False, sanitize: bool = False):
     """Prefix caching vs plain paging on a shared-prefix trace.
 
     Every prompt opens with the same system prefix (share ratio ~0.75),
@@ -306,12 +315,18 @@ def run_prefix_comparison(smoke: bool = False):
     done_b, _ = drive_trace(base, trace)
     b_wall = time.perf_counter() - t0
 
+    # --sanitize arms the arena sanitizer on the sharing pass (the one
+    # with COW/refcount invariants to violate) and asserts leak-freedom
     pfx = Scheduler(Engine(cfg, params, max_len=max_len, seed=0,
-                           paged=True, block_size=block),
+                           paged=True, block_size=block,
+                           sanitize=sanitize),
                     n_slots=n_slots, chunk_size=chunk, prefix_cache=True)
     t0 = time.perf_counter()
     done_p, _ = drive_trace(pfx, trace)
     p_wall = time.perf_counter() - t0
+    if sanitize:
+        assert pfx.n_leaked == 0 and not pfx.leak_report(), \
+            f"sanitizer found leaked arena blocks: {pfx.leak_report()}"
 
     assert done_b.keys() == done_p.keys()
     for rid in done_b:
@@ -342,16 +357,17 @@ def run_prefix_comparison(smoke: bool = False):
 if __name__ == "__main__":
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
+    sanitize = "--sanitize" in argv
     print("name,us_per_call,derived")
     if "--paged" in argv:
-        rows = run_paged_comparison(smoke=smoke)
+        rows = run_paged_comparison(smoke=smoke, sanitize=sanitize)
         if "--prefix-share" in argv:
-            rows += run_prefix_comparison(smoke=smoke)
+            rows += run_prefix_comparison(smoke=smoke, sanitize=sanitize)
     elif "--prefix-share" in argv:
-        rows = run_prefix_comparison(smoke=smoke)
+        rows = run_prefix_comparison(smoke=smoke, sanitize=sanitize)
     else:
         rows = run(smoke=smoke, paged=not smoke)
         if smoke:
-            rows += run_prefix_comparison(smoke=smoke)
+            rows += run_prefix_comparison(smoke=smoke, sanitize=sanitize)
     for row in rows:
         print(",".join(str(x) for x in row))

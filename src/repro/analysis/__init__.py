@@ -1,0 +1,28 @@
+"""positcheck — repo-invariant static analyzer for the PVU serving stack.
+
+Pure-stdlib (``ast`` + ``re``): the CI lint lane runs it without jax
+installed, and ``python -m repro.analysis`` stays import-light because
+``repro`` is a namespace package.
+
+The rules encode bug classes we actually shipped:
+
+- PVU001 — raw ``lax.dynamic_update_slice*`` cache writes (the PR 3
+  decode clamp-overwrite class; writes must route through
+  ``guarded_cache_update`` / ``paged_cache_update``).
+- PVU002 — dequant→f32→requant round-trips outside ``kernels/`` and
+  ``compress/`` (the fused PVU elementwise kernels exist to replace
+  these).
+- PVU003 — dtype/shape sniffing on cache leaves instead of the
+  ``CONTENT_LEAVES``/``META_LEAVES`` schema (the pre-PR 5 tagging bug).
+- PVU004 — Python ``if``/``assert`` on traced values inside
+  jit-decorated or scan-body functions (trace-safety hazards).
+- PVU005 — reaching into ``BlockPool`` private allocator state outside
+  ``compress/kvcache.py`` (bypasses the refcount/COW invariants).
+
+Findings are waivable per line with ``# positcheck: disable=PVU001``
+(comma-separated ids, or ``all``).  The waiver must sit on the line the
+finding points at or on the first line of the flagged statement.
+"""
+
+from .core import Finding, ModuleFile, Rule, run_paths  # noqa: F401
+from .rules import ALL_RULES, rule_by_id  # noqa: F401

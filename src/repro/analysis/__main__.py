@@ -1,0 +1,6 @@
+"""Entry point: ``PYTHONPATH=src python -m repro.analysis [paths ...]``."""
+import sys
+
+from .cli import main
+
+sys.exit(main())

@@ -1,0 +1,344 @@
+"""The positcheck rules (PVU001–PVU005).
+
+Each rule is a bug class this repo actually shipped (or nearly did);
+see the module docstring of :mod:`repro.analysis` and the "Invariants &
+enforcement" section of ``docs/ARCHITECTURE.md`` for the history.
+
+Rules are syntactic and deliberately conservative: they match the
+idioms used in this codebase, not every conceivable spelling.  A miss
+is acceptable; a false positive on idiomatic repo code is not — anything
+that must stay gets a per-line ``# positcheck: disable=PVUxxx`` waiver
+with a comment explaining why the invariant holds there.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .core import ModuleFile, Rule
+
+# ---------------------------------------------------------------------------
+# shared walkers
+
+
+def _calls_with_fstack(tree: ast.Module) -> Iterator[tuple[ast.Call, tuple[str, ...]]]:
+    """Yield every Call with the names of its enclosing function defs."""
+
+    def walk(node: ast.AST, stack: tuple[str, ...]):
+        for child in ast.iter_child_nodes(node):
+            child_stack = stack
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                child_stack = stack + (child.name,)
+            if isinstance(child, ast.Call):
+                yield child, stack
+            yield from walk(child, child_stack)
+
+    yield from walk(tree, ())
+
+
+def _contains_cacheish_name(node: ast.AST) -> bool:
+    """Does this expression mention a cache-derived variable?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and "cache" in sub.id.lower():
+            return True
+        if isinstance(sub, ast.Attribute) and "cache" in sub.attr.lower():
+            return True
+    return False
+
+
+def _in_dirs(mod: ModuleFile, *dirs: str) -> bool:
+    parts = mod.path.parts
+    return any(d in parts for d in dirs)
+
+
+def _is_file(mod: ModuleFile, suffix: str) -> bool:
+    return mod.path.as_posix().endswith(suffix)
+
+
+# ---------------------------------------------------------------------------
+# PVU001 — raw dynamic_update_slice* cache writes (the clamp bug class)
+
+
+class RawCacheWrite(Rule):
+    id = "PVU001"
+    severity = "error"
+    title = "raw lax.dynamic_update_slice* outside the guarded helpers"
+    hint = (
+        "route the write through layers.guarded_cache_update (linear/ring "
+        "caches) or layers.paged_cache_update (block tables; sentinel "
+        "entries DROP) — lax.dynamic_update_slice* CLAMPS out-of-range "
+        "starts and silently overwrites the last slot (the PR 3 decode "
+        "bug). If clamping is provably impossible, waive with "
+        "'# positcheck: disable=PVU001' plus a comment proving the bound."
+    )
+
+    DUS = {"dynamic_update_slice", "dynamic_update_slice_in_dim"}
+    # the one approved wrapper: its body is the single sanctioned call site
+    ALLOWED_FUNCS = {"guarded_cache_update"}
+
+    def check(self, mod: ModuleFile):
+        for call, fstack in _calls_with_fstack(mod.tree):
+            leaf = self.call_name(call).rsplit(".", 1)[-1]
+            if leaf in self.DUS and not (set(fstack) & self.ALLOWED_FUNCS):
+                yield call, (
+                    f"raw lax.{leaf} (clamps out-of-range start indices) "
+                    "outside guarded_cache_update/paged_cache_update"
+                )
+
+
+# ---------------------------------------------------------------------------
+# PVU002 — dequant→f32→requant round-trips outside kernels/ and compress/
+
+
+class RequantRoundTrip(Rule):
+    id = "PVU002"
+    severity = "warning"
+    title = "dequantize→f32→requantize round-trip outside approved internals"
+    hint = (
+        "the fused posit-domain kernels (kernels.ops.vadd/vsub/vmul/vdiv, "
+        "pgemm) exist to replace decode→f32-op→re-encode round-trips "
+        "(~11x at 64k elements); compute in the posit domain or move the "
+        "round-trip into kernels/ or compress/ internals"
+    )
+
+    QUANT = {"f32_to_posit", "quantize", "quantize_cache"}
+    DEQUANT = {"posit_to_f32", "dequantize", "dequantize_cache"}
+    ALLOWED_DIRS = ("kernels", "compress")
+
+    def check(self, mod: ModuleFile):
+        if _in_dirs(mod, *self.ALLOWED_DIRS):
+            return
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if self.call_name(node).rsplit(".", 1)[-1] not in self.QUANT:
+                continue
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                for sub in ast.walk(arg):
+                    if (isinstance(sub, ast.Call)
+                            and self.call_name(sub).rsplit(".", 1)[-1] in self.DEQUANT):
+                        yield node, (
+                            "requantizing a freshly dequantized value "
+                            "(dequant→f32→requant round-trip)"
+                        )
+                        break
+                else:
+                    continue
+                break
+
+
+# ---------------------------------------------------------------------------
+# PVU003 — dtype sniffing on cache leaves instead of the leaf schema
+
+
+class CacheDtypeSniff(Rule):
+    id = "PVU003"
+    severity = "error"
+    title = "dtype sniffing on cache leaves instead of the leaf schema"
+    hint = (
+        "classify cache leaves by NAME via kvcache.CONTENT_LEAVES / "
+        "META_LEAVES (the explicit schema PR 5 introduced) — dtype "
+        "sniffing broke when int32 metadata leaves (lens, block_tables) "
+        "joined the cache pytree"
+    )
+
+    # the schema implementation itself may inspect dtypes
+    ALLOWED_FILE = "compress/kvcache.py"
+
+    def check(self, mod: ModuleFile):
+        if _is_file(mod, self.ALLOWED_FILE):
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                if self.call_name(node).rsplit(".", 1)[-1] != "issubdtype":
+                    continue
+                if node.args and _contains_cacheish_name(node.args[0]):
+                    yield node, (
+                        "issubdtype() on a cache-derived leaf — dtype "
+                        "sniffing instead of the CONTENT_LEAVES/META_LEAVES "
+                        "schema"
+                    )
+            elif isinstance(node, ast.Compare):
+                if not all(isinstance(op, (ast.Eq, ast.NotEq)) for op in node.ops):
+                    continue
+                for side in [node.left] + node.comparators:
+                    if (isinstance(side, ast.Attribute) and side.attr == "dtype"
+                            and _contains_cacheish_name(side)):
+                        yield node, (
+                            "comparing .dtype of a cache-derived leaf — "
+                            "dtype sniffing instead of the "
+                            "CONTENT_LEAVES/META_LEAVES schema"
+                        )
+                        break
+
+
+# ---------------------------------------------------------------------------
+# PVU004 — python control flow on traced values in jit/scan contexts
+
+
+class TracedBranch(Rule):
+    id = "PVU004"
+    severity = "error"
+    title = "python if/assert on a traced value inside a jit/scan function"
+    hint = (
+        "python branches evaluate ONCE at trace time against abstract "
+        "values (TracerBoolConversionError at best, silently-baked-in "
+        "branch at worst); use lax.cond/lax.select/jnp.where for traced "
+        "conditions, or hoist static config out of the traced function"
+    )
+
+    TRACING_WRAPPERS = {"jit"}
+    # (call leaf name, indices of function-valued args)
+    BODY_POSITIONS = {
+        "scan": (0,),
+        "while_loop": (0, 1),
+        "fori_loop": (2,),
+        "cond": (1, 2),
+        "switch": (1, 2, 3, 4),
+        "map": (0,),
+    }
+    STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+    STATIC_CALLS = {"len", "isinstance", "hasattr", "getattr", "type", "callable"}
+
+    def _decorated_jit(self, fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+        for dec in fn.decorator_list:
+            name = self.dotted_name(dec)
+            if name.rsplit(".", 1)[-1] in self.TRACING_WRAPPERS:
+                return True
+            if isinstance(dec, ast.Call):
+                cname = self.call_name(dec)
+                if cname.rsplit(".", 1)[-1] in self.TRACING_WRAPPERS:
+                    return True
+                if cname.rsplit(".", 1)[-1] == "partial" and dec.args:
+                    first = self.dotted_name(dec.args[0])
+                    if first.rsplit(".", 1)[-1] in self.TRACING_WRAPPERS:
+                        return True
+        return False
+
+    def _traced_names(self, tree: ast.Module) -> set[str]:
+        """Names of local functions that get traced: jit(f) wrappings and
+        lax.scan/while_loop/cond/... body arguments."""
+        traced: set[str] = set()
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = self.call_name(node)
+            leaf = name.rsplit(".", 1)[-1]
+            if leaf in self.TRACING_WRAPPERS:
+                for arg in node.args[:1]:
+                    if isinstance(arg, ast.Name):
+                        traced.add(arg.id)
+            elif leaf in self.BODY_POSITIONS and ("lax" in name or leaf == "scan"):
+                for i in self.BODY_POSITIONS[leaf]:
+                    if i < len(node.args) and isinstance(node.args[i], ast.Name):
+                        traced.add(node.args[i].id)
+        return traced
+
+    def _param_names(self, fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+        a = fn.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return {n for n in names if n not in ("self", "cls", "cfg", "config")}
+
+    def _unsafe_param_use(self, test: ast.expr, params: set[str]) -> bool:
+        """True if ``test`` uses a (likely traced) parameter in a way that
+        forces concretization — i.e. not via static .shape/.ndim/.dtype
+        attributes, len()/isinstance()-style host calls, or is/in ops."""
+        parents: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(test):
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+        for node in ast.walk(test):
+            if not (isinstance(node, ast.Name) and node.id in params):
+                continue
+            cur, safe = node, False
+            while cur in parents:
+                parent = parents[cur]
+                if isinstance(parent, ast.Attribute) and parent.attr in self.STATIC_ATTRS:
+                    safe = True
+                    break
+                if isinstance(parent, ast.Call) and cur in parent.args:
+                    if self.call_name(parent).rsplit(".", 1)[-1] in self.STATIC_CALLS:
+                        safe = True
+                        break
+                if isinstance(parent, ast.Compare):
+                    ops = parent.ops
+                    if all(isinstance(o, (ast.Is, ast.IsNot, ast.In, ast.NotIn))
+                           for o in ops):
+                        safe = True
+                        break
+                cur = parent
+            if not safe:
+                return True
+        return False
+
+    def check(self, mod: ModuleFile):
+        traced_names = self._traced_names(mod.tree)
+        for fn, _stack in self.functions_with_stack(mod.tree):
+            if not (self._decorated_jit(fn) or fn.name in traced_names):
+                continue
+            params = self._param_names(fn)
+            if not params:
+                continue
+            for node in ast.walk(fn):
+                if isinstance(node, ast.If):
+                    test, kind = node.test, "if"
+                elif isinstance(node, ast.Assert):
+                    test, kind = node.test, "assert"
+                else:
+                    continue
+                if self._unsafe_param_use(test, params):
+                    yield node, (
+                        f"python '{kind}' on a traced argument of "
+                        f"'{fn.name}' (jit/scan-traced) — the branch is "
+                        "evaluated once at trace time"
+                    )
+
+
+# ---------------------------------------------------------------------------
+# PVU005 — reaching into BlockPool private allocator state
+
+
+class PoolPrivateAccess(Rule):
+    id = "PVU005"
+    severity = "error"
+    title = "BlockPool private state accessed outside the allocator"
+    hint = (
+        "go through the refcount API — alloc()/share()/release() (free is "
+        "the decref alias) — never the private free list or refcount "
+        "table; direct mutation desynchronizes refcounts from the "
+        "PrefixIndex and corrupts copy-on-write (shared blocks get "
+        "reused while still referenced)"
+    )
+
+    PRIVATE_ATTRS = {"_free", "_ref", "_freed"}
+    ALLOWED_FILE = "compress/kvcache.py"
+
+    def check(self, mod: ModuleFile):
+        if _is_file(mod, self.ALLOWED_FILE):
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and node.attr in self.PRIVATE_ATTRS:
+                yield node, (
+                    f"direct access to BlockPool private state '.{node.attr}' "
+                    "bypasses the refcount API (share/release)"
+                )
+
+
+ALL_RULES: tuple[Rule, ...] = (
+    RawCacheWrite(),
+    RequantRoundTrip(),
+    CacheDtypeSniff(),
+    TracedBranch(),
+    PoolPrivateAccess(),
+)
+
+
+def rule_by_id(rule_id: str) -> Rule:
+    for r in ALL_RULES:
+        if r.id == rule_id:
+            return r
+    raise KeyError(rule_id)

@@ -271,17 +271,23 @@ def adopt_row(cache, row_cache, row):
     shift = jnp.asarray(cur, jnp.int32) - jnp.asarray(src, jnp.int32)
     row = jnp.asarray(row, jnp.int32)
     out = dict(cache)
+    # Clamping is impossible in these grafts, so the guarded helpers are
+    # not needed (and would not fit: multi-axis starts, row axis 1): every
+    # start is 0 except `row`, each update spans the full extent of its
+    # axis (so start 0 never clamps), and `row` comes from the scheduler's
+    # slot pool (0 <= row < n_slots); a bad frontier is rejected by the
+    # eager ValueError above before any device write.
     for key, leaf in cache.items():
         if key in _TIME_LEAVES and key in row_cache:
             upd = L.roll_cache_time(row_cache[key], shift)
             starts = (jnp.zeros((), jnp.int32), row) + \
                 tuple(jnp.zeros((), jnp.int32) for _ in range(leaf.ndim - 2))
-            out[key] = lax.dynamic_update_slice(leaf, upd, starts)
+            out[key] = lax.dynamic_update_slice(leaf, upd, starts)  # positcheck: disable=PVU001
         elif key in _ROW_LEAVES and key in row_cache:
             starts = (jnp.zeros((), jnp.int32), row) + \
                 tuple(jnp.zeros((), jnp.int32) for _ in range(leaf.ndim - 2))
-            out[key] = lax.dynamic_update_slice(leaf, row_cache[key], starts)
-    out["lens"] = lax.dynamic_update_slice(
+            out[key] = lax.dynamic_update_slice(leaf, row_cache[key], starts)  # positcheck: disable=PVU001
+    out["lens"] = lax.dynamic_update_slice(  # positcheck: disable=PVU001 (int32 metadata row, same bound)
         jnp.asarray(cache["lens"], jnp.int32),
         jnp.asarray(row_cache["lens"], jnp.int32), (row,))
     return out
@@ -376,6 +382,13 @@ def merge_caches(cache_a, cache_b, name: str, weight_a: float = 0.5,
 # ---------------------------------------------------------------------------
 
 
+class BlockSanitizerError(ValueError):
+    """Arena-sanitizer violation: double free, use-after-free, a write
+    into a shared (refcount > 1) block that skipped copy-on-write, or a
+    wild block id.  Subclasses ``ValueError`` so callers guarding the
+    plain allocator errors keep working."""
+
+
 class BlockPool:
     """Host-side refcounted allocator over ``n_blocks`` arena block ids.
 
@@ -400,9 +413,19 @@ class BlockPool:
     * ``peak_in_use`` / ``peak_logical`` are the corresponding
       high-water marks (capacity planning / the benchmark's
       physical-vs-logical report).
+
+    Sanitizer mode (``BlockPool(n, sanitize=True)``, opt-in): misuse of
+    freed ids raises :class:`BlockSanitizerError` with a use-after-free
+    vs double-free diagnosis, and the ``check_write``/``check_read``
+    gates let the scheduler validate every block a device scatter/gather
+    is about to touch — including the COW invariant (no write into a
+    refcount > 1 block).  The engine pairs this with device-side
+    poisoning of reclaimed blocks (``layers.paged_poison_blocks``) so a
+    stale table entry that slips past the host checks detonates the
+    logits instead of silently serving freed KV.
     """
 
-    def __init__(self, n_blocks: int):
+    def __init__(self, n_blocks: int, *, sanitize: bool = False):
         if n_blocks < 1:
             raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
         self.n_blocks = int(n_blocks)
@@ -410,6 +433,14 @@ class BlockPool:
         self._ref: dict = {}            # block id -> refcount (>= 1)
         self.peak_in_use = 0
         self.peak_logical = 0
+        # Sanitizer mode (opt-in, see class docstring): track which ids
+        # have been freed and not since reallocated so misuse reports can
+        # tell use-after-free from a wild/foreign id, and upgrade the
+        # guards to ``check_write``/``check_read`` entry points callers
+        # (the scheduler) invoke before touching the device arena.
+        self.sanitize = bool(sanitize)
+        self._freed: set = set()        # freed and not yet reallocated
+        self.n_sanitizer_checks = 0
 
     @property
     def n_free(self) -> int:
@@ -445,6 +476,7 @@ class BlockPool:
         ids = [self._free.pop() for _ in range(n)]
         for i in ids:
             self._ref[i] = 1
+            self._freed.discard(i)
         self._note_peaks()
         return ids
 
@@ -453,6 +485,11 @@ class BlockPool:
         ids = [int(i) for i in ids]
         for i in ids:
             if i not in self._ref:
+                if self.sanitize and i in self._freed:
+                    raise BlockSanitizerError(
+                        f"use-after-free: BlockPool.share of block {i}, "
+                        "which is not allocated (freed earlier and not "
+                        "reallocated)")
                 raise ValueError(
                     f"BlockPool.share: block {i} is not allocated; only "
                     "resident blocks can be shared")
@@ -460,22 +497,70 @@ class BlockPool:
             self._ref[i] += 1
         self._note_peaks()
 
-    def free(self, ids) -> None:
-        """Drop one reference per id; physical reclaim at refcount zero."""
+    def free(self, ids) -> list:
+        """Drop one reference per id; physical reclaim at refcount zero.
+
+        Returns the ids physically reclaimed by THIS call (refcount hit
+        zero) — the sanitizer poisons exactly those arena blocks.
+        """
         ids = [int(i) for i in ids]
         for i in ids:
             if i not in self._ref:
+                if self.sanitize and i in self._freed:
+                    raise BlockSanitizerError(
+                        f"double free: block {i} is not allocated "
+                        "(already freed and not reallocated)")
                 raise ValueError(
                     f"BlockPool.free: block {i} is not allocated "
                     "(double free or foreign id)")
+        reclaimed = []
         for i in ids:
             self._ref[i] -= 1
             if self._ref[i] == 0:
                 del self._ref[i]
                 self._free.append(i)
+                self._freed.add(i)
+                reclaimed.append(i)
+        return reclaimed
 
     # ``release`` is the sharing-side name for the same decref.
     release = free
+
+    def allocated_ids(self) -> list:
+        """Sorted ids of physically resident blocks (refcount >= 1)."""
+        return sorted(self._ref)
+
+    def check_write(self, ids) -> None:
+        """Sanitizer gate for an imminent arena write into ``ids``.
+
+        Raises :class:`BlockSanitizerError` on a write into a block that
+        is not allocated (use-after-free / wild write) or whose refcount
+        is > 1 — a shared block being written without copy-on-write,
+        which would silently corrupt every other owner's KV.
+        """
+        self.n_sanitizer_checks += 1
+        for i in (int(i) for i in ids):
+            rc = self._ref.get(i)
+            if rc is None:
+                kind = ("use-after-free" if i in self._freed
+                        else "unallocated (wild)")
+                raise BlockSanitizerError(
+                    f"{kind} write: block {i} is not allocated")
+            if rc > 1:
+                raise BlockSanitizerError(
+                    f"COW violation: write into block {i} with refcount "
+                    f"{rc} — shared blocks must be copied "
+                    "(copy-on-write) before the first write")
+
+    def check_read(self, ids) -> None:
+        """Sanitizer gate for reads: every id must be resident."""
+        self.n_sanitizer_checks += 1
+        for i in (int(i) for i in ids):
+            if i not in self._ref:
+                kind = ("use-after-free" if i in self._freed
+                        else "unallocated (wild)")
+                raise BlockSanitizerError(
+                    f"{kind} read: block {i} is not allocated")
 
 
 def prefix_block_hashes(tokens, block_size: int) -> list:

@@ -323,8 +323,8 @@ def decode_step(params, cache, token, cfg: ModelConfig, active=None):
             # ring buffer: write at pos % window, rotation-aware masking
             t_swa = k_swa.shape[2]
             slot = lax.rem(pos, t_swa)
-            kc = lax.dynamic_update_slice_in_dim(k_swa[li], quant(k), slot, 1)
-            vc = lax.dynamic_update_slice_in_dim(v_swa[li], quant(v), slot, 1)
+            kc = L.guarded_cache_update(k_swa[li], quant(k), slot, 1)
+            vc = L.guarded_cache_update(v_swa[li], quant(v), slot, 1)
             k_swa = k_swa.at[li].set(kc)
             v_swa = v_swa.at[li].set(vc)
             att = L.decode_attention(q, kc, vc, pos + 1, cfg=cfg,

@@ -601,6 +601,29 @@ def paged_copy_blocks(arena, src_ids, dst_ids):
     return arena.at[:, dst].set(blocks, mode="drop")
 
 
+def paged_poison_blocks(arena, block_ids):
+    """Overwrite whole arena blocks with a loud poison pattern.
+
+    The device half of the arena sanitizer: after the :class:`BlockPool`
+    physically reclaims blocks, the scheduler poisons them so a stale
+    block-table entry (use-after-free the host checks missed) detonates
+    the logits instead of silently serving freed KV.  The poison is
+    FINITE but absurd — ``-1e30`` for float leaves, the posit maxpos
+    pattern for unsigned pattern leaves — because masked-softmax
+    correctness relies on ``0 * poison == 0``: NaN poison would leak
+    through the ``exp(_NEG) = 0`` attention weights of properly masked
+    slots and corrupt healthy rows.  Sentinel ids drop (no-op), so the
+    OUT-OF-RANGE entry is always safe to pass.
+    """
+    if jnp.issubdtype(arena.dtype, jnp.unsignedinteger):
+        bits = jnp.iinfo(arena.dtype).bits
+        poison = jnp.asarray((1 << (bits - 1)) - 1, arena.dtype)  # maxpos
+    else:
+        poison = jnp.asarray(-1e30, arena.dtype)
+    ids = jnp.asarray(block_ids, jnp.int32)
+    return arena.at[:, ids].set(poison, mode="drop")
+
+
 def paged_pack_range(arena, kvs, tables, start, lens, *, window: int = 0):
     """Pack ONLY positions ``[start, lens)`` of suffix KV into arena
     blocks, preserving every other slot of the touched blocks.

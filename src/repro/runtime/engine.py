@@ -76,13 +76,18 @@ class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int,
                  temperature: float = 0.0, seed: int = 0,
                  pad_id: int = 0, paged: bool = False,
-                 block_size: int = 16, n_blocks: int = 0):
+                 block_size: int = 16, n_blocks: int = 0,
+                 sanitize: bool = False):
         """``paged=True`` swaps the dense preallocated cache for the
         block-table layout (transformer family only): prefill allocates
         arena blocks per row from a host-side ``BlockPool`` free list
         instead of reserving ``batch x max_len`` slots up front.
         ``n_blocks`` sizes the shared arena (0 = worst case, one full
-        table per row — no memory win, but never out of blocks)."""
+        table per row — no memory win, but never out of blocks).
+        ``sanitize=True`` arms the arena sanitizer: pools are created
+        with ``BlockPool(sanitize=True)`` (double-free/use-after-free/
+        COW-skip detection) and reclaimed blocks are poisoned on device
+        via :meth:`poison_blocks` so stale table entries detonate."""
         self.cfg = cfg
         self.params = params
         self.fam = get_family(cfg)
@@ -92,6 +97,7 @@ class Engine:
         self.paged = bool(paged)
         self.block_size = int(block_size)
         self.n_blocks = int(n_blocks)
+        self.sanitize = bool(sanitize)
         if self.paged:
             if cfg.family != "transformer":
                 raise ValueError(
@@ -166,7 +172,7 @@ class Engine:
         """Host-side block allocation for a prompt batch: returns the
         (B, W) int32 table (sentinel = n_blocks in unassigned entries)
         and the pool it drew from."""
-        pool = pool or kvc.BlockPool(n_blocks)
+        pool = pool or kvc.BlockPool(n_blocks, sanitize=self.sanitize)
         tables = np.full((len(lens), self.table_width), n_blocks,
                          np.int32)
         for row, pl in enumerate(lens):
@@ -304,6 +310,26 @@ class Engine:
         return self._decode_jit[key](
             cache, jnp.asarray(src_ids, jnp.int32),
             jnp.asarray(dst_ids, jnp.int32))
+
+    def poison_blocks(self, cache, ids):
+        """Sanitizer device half: overwrite reclaimed arena blocks with
+        the loud-but-finite poison pattern (``layers.paged_poison_blocks``)
+        across every content leaf.  Jit-specialized per block count; a
+        stale table entry pointing at a poisoned block corrupts logits
+        visibly instead of silently serving freed KV."""
+        if not ids:
+            return cache
+        from repro.models import layers as L
+        keys = ("c_kv", "k_rope") if self.cfg.mla else ("k", "v")
+        key = ("poison", len(ids))
+        if key not in self._decode_jit:
+            def run(cache, ids):
+                out = dict(cache)
+                for k in keys:
+                    out[k] = L.paged_poison_blocks(cache[k], ids)
+                return out
+            self._decode_jit[key] = jax.jit(run)
+        return self._decode_jit[key](cache, jnp.asarray(ids, jnp.int32))
 
     # ------------------------------------------------------------------
     # decode: one lax.scan == one compiled call for the whole generation

@@ -169,6 +169,9 @@ class Scheduler:
         self.eos_id = eos_id
         self.paged = bool(getattr(engine, "paged", False))
         self.prefix_cache = bool(prefix_cache)
+        # arena sanitizer: inherited from the engine so one flag arms
+        # both halves (host-side BlockPool checks + device poisoning)
+        self.sanitize = bool(getattr(engine, "sanitize", False))
         if self.prefix_cache and not self.paged:
             raise ValueError(
                 "prefix_cache=True needs Engine(paged=True): sharing "
@@ -180,7 +183,8 @@ class Scheduler:
             self.table_width = engine.table_width
             self.n_blocks = engine.n_blocks or \
                 self.n_slots * self.table_width
-            self.pool = kvc.BlockPool(self.n_blocks)
+            self.pool = kvc.BlockPool(self.n_blocks,
+                                      sanitize=self.sanitize)
             self.cache = T.init_paged_cache(
                 engine.cfg, self.n_slots, engine.max_len,
                 self.block_size, self.n_blocks)
@@ -218,6 +222,10 @@ class Scheduler:
         self.prefix_matched_tokens = 0  # prompt tokens served from cache
         self.n_cow = 0                 # copy-on-write block duplications
         self.n_evicted = 0             # index blocks reclaimed under pressure
+        # sanitizer leak gauge: allocated blocks unreachable from any
+        # live row, borrowed reference, or the prefix index, recomputed
+        # at every retirement (0 on a healthy trace; see leak_report)
+        self.n_leaked = 0
         self._slots: list = [None] * self.n_slots
         self._queue: deque = deque()
         self._cur_tok = np.zeros((self.n_slots,), np.int32)
@@ -331,13 +339,19 @@ class Scheduler:
         blocks first if the free list is short.  Callers have already
         checked ``n_free + evictable`` covers their reservation."""
         if n > self.pool.n_free:
+            evicted = []
             for bid in self.index.blocks_lru():
                 if self.pool.n_free >= n:
                     break
                 if self.pool.refcount(bid) == 1:
                     self.index.pop_block(bid)
-                    self.pool.free([bid])
+                    evicted += self.pool.free([bid])
                     self.n_evicted += 1
+            if self.sanitize and evicted:
+                # evicted blocks may linger on the free list past the
+                # alloc below — poison them so any stale index/table
+                # path that still names them reads garbage, loudly
+                self.cache = self.engine.poison_blocks(self.cache, evicted)
         return self.pool.alloc(n)
 
     def _match_prefix(self, prompt) -> list:
@@ -585,6 +599,33 @@ class Scheduler:
             self.cache = dict(self.cache,
                               block_tables=jnp.asarray(self._tables))
 
+    def _sanitize_check_chunk(self):
+        """Pre-chunk sanitizer gate (``sanitize=True`` only): every
+        resident table entry of a live row must still be allocated
+        (``check_read`` — stale entries are use-after-free gathers) and
+        every block the imminent decode chunk writes through must be
+        exclusively owned (``check_write`` — refcount > 1 here means a
+        COW pass was skipped and the write would corrupt every other
+        owner's KV).  The write span mirrors ``_cow_window_rows``:
+        logical blocks ``lens // bs .. (lens + chunk - 1) // bs``,
+        mapped through the ring on the window lane."""
+        w, bs = self.table_width, self.block_size
+        for i, slot in enumerate(self._slots):
+            if slot is None or slot.done:
+                continue
+            row = self._tables[i]
+            self.pool.check_read(
+                int(b) for b in row if int(b) != self.n_blocks)
+            lo = slot.lens // bs
+            hi = (slot.lens + self.chunk_size - 1) // bs
+            if self.engine.window_lane:
+                slots_touched = {q % w for q in range(lo, hi + 1)}
+            else:
+                slots_touched = range(lo, min(hi, w - 1) + 1)
+            self.pool.check_write(
+                int(row[s]) for s in slots_touched
+                if int(row[s]) != self.n_blocks)
+
     def _admit(self):
         free = [i for i, s in enumerate(self._slots) if s is None]
         while self._queue and free:
@@ -618,9 +659,28 @@ class Scheduler:
             self._cur_tok[row] = tok0
             self.n_admitted += 1
 
+    def leak_report(self) -> set:
+        """Sanitizer leak accounting: allocated block ids unreachable
+        from any live row's owned blocks, any borrowed table entry, or
+        the prefix index.  A non-empty set means references were dropped
+        without ``free``/``release`` — those blocks can never be
+        reclaimed.  Valid to call any time; ``_retire`` refreshes the
+        ``n_leaked`` gauge from it."""
+        if not self.paged:
+            return set()
+        held: set = set()
+        for ids in self._row_blocks:
+            held.update(int(b) for b in ids)
+        for borrowed in self._row_borrowed:
+            held.update(int(b) for b in borrowed.values())
+        if self.prefix_cache:
+            held.update(int(b) for b in self.index.blocks_lru())
+        return set(self.pool.allocated_ids()) - held
+
     def _retire(self):
         done_mask = np.zeros((self.n_slots,), bool)
         completions = []
+        reclaimed: list = []
         for i, slot in enumerate(self._slots):
             if slot is None or not slot.done:
                 continue
@@ -639,9 +699,10 @@ class Scheduler:
                 # reclaim unless the prefix index still holds them;
                 # borrowed blocks just decref back to their other owners
                 self._outstanding -= self._row_debt(i)
-                self.pool.free(self._row_blocks[i])
+                reclaimed += self.pool.free(self._row_blocks[i])
                 if self._row_borrowed[i]:
-                    self.pool.release(list(self._row_borrowed[i].values()))
+                    reclaimed += self.pool.release(
+                        list(self._row_borrowed[i].values()))
                 self._row_blocks[i] = []
                 self._row_borrowed[i] = {}
                 self._row_used[i] = 0
@@ -650,9 +711,17 @@ class Scheduler:
         if done_mask.any():
             if self.paged:
                 # lens -> 0 + sentinel tables; freed arena blocks are
-                # overwritten wholesale on reuse, nothing to wipe
+                # overwritten wholesale on reuse, nothing to wipe —
+                # except under the sanitizer, which poisons them so a
+                # stale table entry detonates instead of silently
+                # serving freed KV
                 self.cache = self._release(self.cache,
                                            jnp.asarray(done_mask))
+                if self.sanitize:
+                    if reclaimed:
+                        self.cache = self.engine.poison_blocks(
+                            self.cache, reclaimed)
+                    self.n_leaked = len(self.leak_report())
             else:
                 self.cache = self._reset(self.cache,
                                          jnp.asarray(done_mask))
@@ -684,6 +753,8 @@ class Scheduler:
         if self.paged:
             # no shared frontier: rows extend their own block tables
             self._ensure_blocks()
+            if self.sanitize:
+                self._sanitize_check_chunk()
         elif self._frontier + self.chunk_size > self.engine.max_len:
             # reclaim headroom freed by retirements / short rows
             target = max(s.lens for s in self._slots

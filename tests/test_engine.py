@@ -213,6 +213,53 @@ def test_sliding_window_ring_matches_full_length_reference():
                                    err_msg=f"step {i}")
 
 
+def test_hymba_decode_no_clamp_overwrite():
+    """Hymba's hybrid cache used raw ``dynamic_update_slice_in_dim`` for
+    its SWA ring writes (the PVU001 bug class): once ``pos % window``
+    computed a slot past the clamp bound the write would silently pile
+    onto the last ring slot.  Pin the guarded semantics on both lanes:
+    every decode step must touch exactly ring slot ``pos % window`` (no
+    clamp pile-up), and the global layer's last prompt slot must survive
+    decode into headroom, mirroring the dense clamp test above."""
+    cfg = configs.get_config("hymba-1.5b").reduced(
+        compute_dtype="float32", sliding_window=4)
+    H = get_family(cfg)
+    params = _params(cfg, seed=3)
+    rng = np.random.default_rng(3)
+    b, s, steps = 2, 6, 5
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, (b, s)), jnp.int32)
+
+    cache, logits = H.prefill(params, tokens, cfg, max_len=s + 8)
+    w = cache["k_swa"].shape[2]
+    assert w == cfg.sliding_window                       # ring-sized
+    # global_layers=(0,) -> layer 1 is the SWA ring lane
+    gslot = np.asarray(cache["k_glb"][0][:, s - 1])
+    assert np.abs(gslot).sum() > 0                       # a real prompt key
+
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(steps):
+        pos = int(cache["len"])
+        before = np.asarray(cache["k_swa"][1])
+        logits, cache = H.decode_step(params, cache, tok, cfg)
+        after = np.asarray(cache["k_swa"][1])
+        for t in range(w):
+            if t == pos % w:
+                assert not (after[:, t] == before[:, t]).all(), \
+                    f"pos {pos}: ring slot {t} should have been written"
+            else:
+                np.testing.assert_array_equal(
+                    after[:, t], before[:, t],
+                    err_msg=f"pos {pos}: ring slot {t} clobbered "
+                            f"(clamp pile-up?)")
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    # global lane: last prompt slot untouched, decode landed in headroom
+    np.testing.assert_array_equal(np.asarray(cache["k_glb"][0][:, s - 1]),
+                                  gslot)
+    assert np.abs(np.asarray(cache["k_glb"][0][:, s:s + steps])).sum() > 0
+    assert int(cache["len"]) == s + steps
+
+
 # ---------------------------------------------------------------------------
 # engine: one-scan decode, ragged batching, capacity enforcement
 # ---------------------------------------------------------------------------

@@ -97,6 +97,78 @@ def test_block_pool_rejects_double_free_and_foreign_ids():
 
 
 # ---------------------------------------------------------------------------
+# arena sanitizer (BlockPool(sanitize=True) + device poisoning)
+# ---------------------------------------------------------------------------
+
+def test_sanitizer_diagnoses_double_free_use_after_free_and_cow_skip():
+    """Seeded misuse, one of each class the sanitizer exists to catch:
+    double free, use-after-free (write/read/share of a freed id), a
+    COW-skip (write into a refcount > 1 block), and a wild id."""
+    pool = kvc.BlockPool(6, sanitize=True)
+    a, b, c = pool.alloc(3)
+
+    assert pool.free([a]) == [a]        # physically reclaimed
+    with pytest.raises(kvc.BlockSanitizerError, match="double free"):
+        pool.free([a])
+    with pytest.raises(kvc.BlockSanitizerError, match="use-after-free"):
+        pool.check_write([a])
+    with pytest.raises(kvc.BlockSanitizerError, match="use-after-free"):
+        pool.check_read([a])
+    with pytest.raises(kvc.BlockSanitizerError, match="use-after-free"):
+        pool.share([a])
+
+    pool.share([b])                     # now refcount 2: COW required
+    with pytest.raises(kvc.BlockSanitizerError, match="COW violation"):
+        pool.check_write([b])
+    pool.check_read([b])                # reads of shared blocks are fine
+    pool.release([b])
+    pool.check_write([b])               # exclusive again
+
+    with pytest.raises(kvc.BlockSanitizerError, match="wild"):
+        pool.check_write([42])
+
+    # free returns ONLY physically reclaimed ids (refcount hit zero)
+    pool.share([c])
+    assert pool.free([c]) == []
+    assert pool.free([c]) == [c]
+
+    # reallocation clears the freed mark: the id is healthy again
+    fresh = pool.alloc(1)
+    pool.check_write(fresh)
+    assert pool.allocated_ids() == sorted([b] + fresh)
+
+
+def test_sanitizer_off_keeps_plain_allocator_errors():
+    pool = kvc.BlockPool(4)             # sanitize defaults to False
+    ids = pool.alloc(1)
+    assert pool.free(ids) == ids
+    with pytest.raises(ValueError) as ei:
+        pool.free(ids)
+    assert not isinstance(ei.value, kvc.BlockSanitizerError)
+
+
+def test_paged_poison_blocks_patterns_and_sentinel_drop():
+    """Device half: float leaves poison to a finite absurd value (NaN
+    would leak through masked-softmax zeros as 0 * NaN), unsigned posit
+    pattern leaves to maxpos, untouched blocks stay intact, and the
+    sentinel id drops its write."""
+    from repro.models import layers as L
+    arena_f = jnp.ones((2, 4, 3, 2, 2), jnp.float32)       # (L,nb,bs,H,D)
+    out = L.paged_poison_blocks(arena_f, [1, 3])
+    assert np.all(np.asarray(out[:, (1, 3)]) == -1e30)
+    assert np.all(np.asarray(out[:, (0, 2)]) == 1.0)
+    assert np.all(np.isfinite(np.asarray(out)))
+
+    arena_u = jnp.zeros((2, 4, 3, 2, 2), jnp.uint8)
+    out = L.paged_poison_blocks(arena_u, [0])
+    assert np.all(np.asarray(out[:, 0]) == 0x7F)           # posit8 maxpos
+    assert np.all(np.asarray(out[:, 1:]) == 0)
+
+    out = L.paged_poison_blocks(arena_f, [4])              # sentinel: drop
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(arena_f))
+
+
+# ---------------------------------------------------------------------------
 # token identity: paged engine == linear/ring engine
 # ---------------------------------------------------------------------------
 
@@ -164,8 +236,11 @@ def test_paged_scheduler_matches_compaction_scheduler(lane):
     rids_l, done_l = _run_sched(lin, prompts, gens)
 
     nb = 10 if lane == "dense" else 0    # dense: strictly below 2*8 worst
+    # sanitize=True: the full arena sanitizer (pre-chunk check_read/
+    # check_write gates + poisoning of reclaimed blocks) must be
+    # invisible to the tokens AND report a leak-free trace
     pag = Scheduler(Engine(cfg, params, max_len=32, seed=0, paged=True,
-                           block_size=4, n_blocks=nb),
+                           block_size=4, n_blocks=nb, sanitize=True),
                     n_slots=2, chunk_size=4)
     rids_p, done_p = _run_sched(pag, prompts, gens)
 
@@ -178,6 +253,8 @@ def test_paged_scheduler_matches_compaction_scheduler(lane):
             kvc.cache_report(lin.cache)["bytes"]
     # no block leaked once everything retired
     assert pag.pool.in_use == 0 and pag._outstanding == 0
+    assert pag.n_leaked == 0 and not pag.leak_report()
+    assert pag.pool.n_sanitizer_checks > 0    # the gates actually ran
 
 
 def test_paged_scheduler_defers_admission_when_pool_is_tight():

@@ -132,14 +132,20 @@ def test_prefix_index_lru_and_first_writer_wins():
 # ---------------------------------------------------------------------------
 
 def _run_trace(cfg, params, prompts, *, prefix_cache, max_new, bs, nb,
-               max_len, n_slots=2, chunk=4):
+               max_len, n_slots=2, chunk=4, sanitize=True):
+    # sanitize=True by default: every prefix/paged trace in this suite
+    # runs under the arena sanitizer (pre-chunk check_read/check_write
+    # gates, poisoned reclaims, leak accounting at retirement) — it must
+    # never change a token and must end leak-free
     eng = Engine(cfg, params, max_len=max_len, paged=True,
-                 block_size=bs, n_blocks=nb)
+                 block_size=bs, n_blocks=nb, sanitize=sanitize)
     sched = Scheduler(eng, n_slots=n_slots, chunk_size=chunk,
                       prefix_cache=prefix_cache)
     rids = [sched.submit(p, max_new) for p in prompts]
     done = sched.run(max_rounds=500)
     toks = {r: done[r].tokens.tolist() for r in rids}
+    if sanitize:
+        assert sched.n_leaked == 0 and not sched.leak_report()
     return toks, sched
 
 
@@ -226,6 +232,22 @@ def test_window_ring_recycling_cows_shared_blocks():
     shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True, **kw)
     assert shared == base
     assert ss.n_cow > 0
+
+
+@pytest.mark.slow
+def test_sanitizer_catches_skipped_window_cow(monkeypatch):
+    """Seeded COW-skip, end to end: with the pre-chunk ring COW pass
+    disabled, the window lane's decode chunk would write through a
+    shared (refcount > 1) block — the sanitizer's ``check_write`` gate
+    must abort with a COW violation BEFORE the device write corrupts
+    the donor's KV."""
+    cfg = _cfg("window")
+    params = _params(cfg)
+    prompts, kw = _lane_trace("window", np.random.default_rng(3))
+    monkeypatch.setattr(Scheduler, "_cow_window_rows",
+                        lambda self: False)
+    with pytest.raises(kvc.BlockSanitizerError, match="COW violation"):
+        _run_trace(cfg, params, prompts, prefix_cache=True, **kw)
 
 
 def test_prefix_cache_requires_paged_engine():

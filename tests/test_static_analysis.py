@@ -1,0 +1,392 @@
+"""positcheck (``repro.analysis``) — the static analyzer that makes our
+shipped bug classes unwritable.
+
+Three layers of pinning:
+
+* Per-rule fixtures — each PVU rule fires on a minimal bad exemplar
+  (modelled on the real bug it encodes), stays silent on the idiomatic
+  good version, and is suppressed by a per-line
+  ``# positcheck: disable=PVUxxx`` waiver.
+* The PR 3 / hymba regression in miniature — reintroducing the raw
+  ``lax.dynamic_update_slice_in_dim`` ring write this PR removed from
+  ``models/hymba.py`` is caught by PVU001.
+* Repo integration — ``python -m repro.analysis src/`` exits 0 on the
+  repo (zero non-waived findings), which is exactly the CI lint-lane
+  contract.
+
+The analyzer is stdlib-only, so none of this needs jax.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis import ALL_RULES, run_paths, rule_by_id
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(tmp_path, code, filename="mod.py"):
+    p = tmp_path / filename
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(code))
+    active, waived, errors = run_paths([p], ALL_RULES)
+    assert not errors, errors
+    return active, waived
+
+
+def _ids(findings):
+    return [f.rule_id for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# PVU001 — raw dynamic_update_slice* cache writes (the clamp bug class)
+# ---------------------------------------------------------------------------
+
+# the exact shape of the hymba SWA ring write this PR fixed: a raw
+# in_dim update whose start would CLAMP (not drop) when out of range
+BAD_HYMBA_RING = """
+    from jax import lax
+
+    def decode_step(k_swa, upd, pos, window):
+        slot = lax.rem(pos, window)
+        kc = lax.dynamic_update_slice_in_dim(k_swa, upd, slot, 1)
+        return kc
+"""
+
+
+def test_pvu001_fires_on_reintroduced_hymba_ring_write(tmp_path):
+    active, _ = _run(tmp_path, BAD_HYMBA_RING)
+    assert _ids(active) == ["PVU001"]
+    (f,) = active
+    assert f.line == 6  # the dynamic_update_slice_in_dim line
+    assert "clamps" in f.message
+    assert "guarded_cache_update" in f.hint
+
+
+def test_pvu001_fires_on_multiarg_dynamic_update_slice(tmp_path):
+    active, _ = _run(tmp_path, """
+        import jax.lax as lax
+
+        def graft(leaf, upd, row):
+            return lax.dynamic_update_slice(leaf, upd, (0, row, 0))
+    """)
+    assert _ids(active) == ["PVU001"]
+
+
+def test_pvu001_silent_inside_guarded_wrapper_and_on_guarded_calls(tmp_path):
+    active, _ = _run(tmp_path, """
+        from jax import lax
+        import jax.numpy as jnp
+
+        def guarded_cache_update(arr, upd, idx, axis):
+            new = lax.dynamic_update_slice_in_dim(arr, upd, idx, axis)
+            return jnp.where(idx < arr.shape[axis], new, arr)
+
+        def decode_step(L, k_swa, upd, slot):
+            return L.guarded_cache_update(k_swa, upd, slot, 1)
+    """)
+    assert active == []
+
+
+def test_pvu001_waiver_suppresses_with_audit_trail(tmp_path):
+    active, waived = _run(tmp_path, """
+        from jax import lax
+
+        def graft(leaf, upd, row):
+            # row < n_slots by construction; starts cannot clamp
+            return lax.dynamic_update_slice(leaf, upd, (0, row, 0))  # positcheck: disable=PVU001
+    """)
+    assert active == []
+    assert _ids(waived) == ["PVU001"]
+
+
+# ---------------------------------------------------------------------------
+# PVU002 — dequant -> f32 -> requant round-trips
+# ---------------------------------------------------------------------------
+
+ROUND_TRIP = """
+    def scale(cache, s):
+        return quantize(dequantize(cache) * s)
+"""
+
+
+def test_pvu002_fires_on_round_trip_outside_internals(tmp_path):
+    active, _ = _run(tmp_path, ROUND_TRIP)
+    assert _ids(active) == ["PVU002"]
+    assert active[0].severity == "warning"
+    assert "vadd" in active[0].hint  # points at the fused kernels
+
+
+def test_pvu002_silent_in_kernels_and_compress(tmp_path):
+    for where in ("kernels/posit_ew.py", "compress/kvcache.py"):
+        active, _ = _run(tmp_path, ROUND_TRIP, filename=where)
+        assert active == [], where
+
+
+def test_pvu002_silent_on_posit_domain_compute(tmp_path):
+    active, _ = _run(tmp_path, """
+        def scale(cache, s, ops):
+            return ops.vmul(cache, s)
+
+        def encode(x):
+            return f32_to_posit(x, 8, 0)
+    """)
+    assert active == []
+
+
+def test_pvu002_waiver(tmp_path):
+    active, waived = _run(tmp_path, """
+        def slow_reference(cache, s):
+            return quantize(dequantize(cache) * s)  # positcheck: disable=PVU002
+    """)
+    assert active == [] and _ids(waived) == ["PVU002"]
+
+
+# ---------------------------------------------------------------------------
+# PVU003 — dtype sniffing on cache leaves
+# ---------------------------------------------------------------------------
+
+def test_pvu003_fires_on_issubdtype_and_dtype_compare(tmp_path):
+    active, _ = _run(tmp_path, """
+        import jax.numpy as jnp
+
+        def is_patterns(cache):
+            return jnp.issubdtype(cache["k"].dtype, jnp.unsignedinteger)
+
+        def is_quantized(kv_cache):
+            return kv_cache["v"].dtype == jnp.uint8
+    """)
+    assert _ids(active) == ["PVU003", "PVU003"]
+    assert "CONTENT_LEAVES" in active[0].hint
+
+
+def test_pvu003_silent_on_schema_and_weight_sniffing(tmp_path):
+    active, _ = _run(tmp_path, """
+        import jax.numpy as jnp
+
+        def classify(key, CONTENT_LEAVES):
+            return key in CONTENT_LEAVES
+
+        def maybe_dequant(w):
+            # weights are not cache leaves: sniffing is fine here
+            if jnp.issubdtype(w.dtype, jnp.unsignedinteger):
+                return w
+            return w
+    """)
+    assert active == []
+
+
+def test_pvu003_silent_inside_kvcache_itself(tmp_path):
+    active, _ = _run(tmp_path, """
+        import jax.numpy as jnp
+
+        def leaf_kind(cache, k):
+            return jnp.issubdtype(cache[k].dtype, jnp.unsignedinteger)
+    """, filename="compress/kvcache.py")
+    assert active == []
+
+
+def test_pvu003_waiver(tmp_path):
+    active, waived = _run(tmp_path, """
+        import jax.numpy as jnp
+
+        def probe(cache):
+            return jnp.issubdtype(cache["k"].dtype, jnp.floating)  # positcheck: disable=PVU003
+    """)
+    assert active == [] and _ids(waived) == ["PVU003"]
+
+
+# ---------------------------------------------------------------------------
+# PVU004 — python if/assert on traced values
+# ---------------------------------------------------------------------------
+
+def test_pvu004_fires_in_jit_decorated_function(tmp_path):
+    active, _ = _run(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+    """)
+    assert _ids(active) == ["PVU004"]
+    assert "trace time" in active[0].message
+
+
+def test_pvu004_fires_in_scan_body_and_jit_wrapping(tmp_path):
+    active, _ = _run(tmp_path, """
+        import jax
+        from jax import lax
+
+        def step(carry, x):
+            assert x.sum() > 0
+            return carry, x
+
+        def outer(xs):
+            return lax.scan(step, 0, xs)
+
+        def g(y):
+            if y == 1:
+                return y
+            return y + 1
+
+        g_fast = jax.jit(g)
+    """)
+    assert _ids(active) == ["PVU004", "PVU004"]
+
+
+def test_pvu004_silent_on_static_predicates(tmp_path):
+    active, _ = _run(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x, active=None, cfg=None):
+            if x.shape[0] > 2:          # shapes are static under trace
+                x = x * 2
+            if active is None:          # identity checks are host-side
+                x = x + 1
+            if cfg.sliding_window:      # cfg is static config
+                x = x - 1
+            assert isinstance(x, object)
+            return x
+
+        def not_traced(x):
+            if x > 0:                   # plain python function: fine
+                return x
+            return -x
+    """)
+    assert active == []
+
+
+def test_pvu004_waiver(tmp_path):
+    active, waived = _run(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:  # positcheck: disable=PVU004
+                return x
+            return -x
+    """)
+    assert active == [] and _ids(waived) == ["PVU004"]
+
+
+# ---------------------------------------------------------------------------
+# PVU005 — BlockPool private state outside the allocator
+# ---------------------------------------------------------------------------
+
+def test_pvu005_fires_on_private_allocator_state(tmp_path):
+    active, _ = _run(tmp_path, """
+        def steal(pool, bid):
+            pool._free.append(bid)
+            del pool._ref[bid]
+    """)
+    assert _ids(active) == ["PVU005", "PVU005"]
+    assert "share/release" in active[0].message
+
+
+def test_pvu005_silent_on_refcount_api_and_in_kvcache(tmp_path):
+    active, _ = _run(tmp_path, """
+        def borrow(pool, ids):
+            pool.share(ids)
+            return pool.refcount(ids[0]), pool.n_free
+
+        def retire(pool, ids):
+            return pool.release(ids)
+    """)
+    assert active == []
+    active, _ = _run(tmp_path, """
+        class BlockPool:
+            def alloc(self, n):
+                return [self._free.pop() for _ in range(n)]
+    """, filename="compress/kvcache.py")
+    assert active == []
+
+
+def test_pvu005_waiver(tmp_path):
+    active, waived = _run(tmp_path, """
+        def debug_dump(pool):
+            return list(pool._ref)  # positcheck: disable=PVU005
+    """)
+    assert active == [] and _ids(waived) == ["PVU005"]
+
+
+# ---------------------------------------------------------------------------
+# framework behaviour
+# ---------------------------------------------------------------------------
+
+def test_disable_all_waives_every_rule_on_the_line(tmp_path):
+    active, waived = _run(tmp_path, """
+        from jax import lax
+
+        def graft(leaf, upd, row):
+            return lax.dynamic_update_slice(leaf, upd, (0, row))  # positcheck: disable=all
+    """)
+    assert active == [] and _ids(waived) == ["PVU001"]
+
+
+def test_waiver_on_other_line_does_not_suppress(tmp_path):
+    active, _ = _run(tmp_path, """
+        from jax import lax
+        # positcheck: disable=PVU001
+
+        def graft(leaf, upd, row):
+            return lax.dynamic_update_slice(leaf, upd, (0, row))
+    """)
+    assert _ids(active) == ["PVU001"]
+
+
+def test_rule_registry_is_complete():
+    ids = [r.id for r in ALL_RULES]
+    assert ids == ["PVU001", "PVU002", "PVU003", "PVU004", "PVU005"]
+    for rid in ids:
+        r = rule_by_id(rid)
+        assert r.severity in ("error", "warning")
+        assert r.hint and r.title
+
+
+def test_syntax_error_is_reported_not_fatal(tmp_path):
+    (tmp_path / "broken.py").write_text("def f(:\n")
+    active, waived, errors = run_paths([tmp_path], ALL_RULES)
+    assert active == [] and waived == []
+    assert len(errors) == 1 and "broken.py" in errors[0]
+
+
+# ---------------------------------------------------------------------------
+# repo integration: the CI contract
+# ---------------------------------------------------------------------------
+
+def _analysis_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return env
+
+
+def test_repo_src_is_positcheck_clean():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src"],
+        cwd=REPO, env=_analysis_env(), capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout
+
+
+def test_cli_exits_nonzero_on_findings(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(BAD_HYMBA_RING))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(bad)],
+        cwd=REPO, env=_analysis_env(), capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "PVU001" in proc.stdout
+
+
+def test_cli_list_rules():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list-rules"],
+        cwd=REPO, env=_analysis_env(), capture_output=True, text=True)
+    assert proc.returncode == 0
+    for rid in ("PVU001", "PVU002", "PVU003", "PVU004", "PVU005"):
+        assert rid in proc.stdout
