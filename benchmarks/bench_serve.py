@@ -36,16 +36,29 @@ without ``prefix_cache=True`` and asserts token identity with strictly
 fewer prefill tokens and strictly fewer peak physical blocks — the
 dedup win, dropping roughly with the share ratio.
 
+The chunked-prefill section replays an OVERLOAD Poisson trace (arrival
+rate far above drain capacity, ragged prompt lengths) through the paged
+scheduler with and without ``chunked_prefill=True`` on all three
+attention lanes (dense, MLA, sliding-window).  The unchunked path
+jit-specializes admission prefill per prompt length, so every novel
+length stalls the whole pool behind a compile; chunked mode serves
+every request through ONE compiled ``mixed_step`` shape.  Both passes
+must be token-identical per request; the chunked pass must hold a FLAT
+engine compile count after warmup and beat the unchunked pass on p99
+WALL-CLOCK request latency — the tail a recompile stall actually
+inflates (simulation-clock latency alone cannot see it).
+
 ``--smoke`` shrinks the sweep for the CI fast lane (exercises prefill
 headroom, ring-free dense decode, both posit codecs, and the
 continuous-batching scheduler end to end); ``--paged`` runs ONLY the
-paged-vs-compaction comparison (the fast lane's paged smoke), and
+paged-vs-compaction comparison (the fast lane's paged smoke),
 ``--prefix-share`` adds (or alone, runs only) the prefix-caching
-comparison.  ``--sanitize`` arms the arena sanitizer on the paged and
-prefix passes (``BlockPool(sanitize=True)`` misuse checks, pre-chunk
-write gates, poisoned reclaims) and asserts the traces end leak-free —
-the CI smoke runs with it so every PR replays the serving trace under
-the sanitizer.
+comparison, and ``--chunked`` runs ONLY the chunked-prefill
+comparison.  ``--sanitize`` arms the arena sanitizer on the paged,
+prefix and chunked passes (``BlockPool(sanitize=True)`` misuse checks,
+pre-chunk write gates, poisoned reclaims) and asserts the traces end
+leak-free — the CI smoke runs with it so every PR replays the serving
+trace under the sanitizer.
 """
 from __future__ import annotations
 
@@ -123,6 +136,7 @@ def run(smoke: bool = False, paged: bool = True):
     if paged:
         rows.extend(run_paged_comparison(smoke=smoke))
         rows.extend(run_prefix_comparison(smoke=smoke))
+        rows.extend(run_chunked_comparison(smoke=smoke))
     return rows
 
 
@@ -354,17 +368,122 @@ def run_prefix_comparison(smoke: bool = False, sanitize: bool = False):
     ]
 
 
+def _lane_cfg(lane):
+    if lane == "mla":
+        return configs.get_config("minicpm3-4b").reduced(
+            compute_dtype="float32")
+    cfg = configs.get_config(ARCH).reduced(compute_dtype="float32")
+    if lane == "window":
+        cfg = dataclasses.replace(cfg, sliding_window=8, attn_chunk_kv=8)
+    return cfg
+
+
+def _drive_wall(sched, trace):
+    """Like :func:`drive_trace` but records each request's WALL-CLOCK
+    latency (submit -> completion), the number a compile stall actually
+    inflates; returns ``(done, {rid: seconds})``."""
+    pending = list(trace)
+    done, t_sub, lat = {}, {}, {}
+    while pending or sched.has_work:
+        while pending and pending[0][0] <= sched.steps_run:
+            _, prompt, gen = pending.pop(0)
+            rid = sched.submit(prompt, gen)
+            t_sub[rid] = time.perf_counter()
+        if not sched.has_work:
+            sched.steps_run = max(sched.steps_run,
+                                  int(np.ceil(pending[0][0])))
+            continue
+        for c in sched.step():
+            done[c.rid] = c
+            lat[c.rid] = time.perf_counter() - t_sub[c.rid]
+    return done, lat
+
+
+def run_chunked_comparison(smoke: bool = False, sanitize: bool = False):
+    """Chunked vs whole-prompt prefill under an overload Poisson trace,
+    on all three attention lanes.
+
+    The arrival rate is far above drain capacity, so the pool is
+    saturated and every admission stall lands on someone's tail
+    latency.  The trace's ragged prompt lengths make the unchunked
+    admission path compile one prefill per novel length; the chunked
+    pass serves them all through the warm ``mixed_step`` program.
+    Asserts per-request token identity, a flat post-warmup compile
+    count (without the sanitizer, whose poison dispatches legitimately
+    jit per reclaim size), and a chunked p99 wall-latency win.
+    """
+    if smoke:
+        n_req, n_slots, plen, gen, chunk = 8, 2, 12, 6, 4
+    else:
+        n_req, n_slots, plen, gen, chunk = 16, 4, 24, 12, 4
+    block, rate = 4, 4.0               # rate >> drain: overload regime
+    max_len = plen + gen - 1 + chunk
+    rows = []
+    for lane in ("dense", "mla", "window"):
+        cfg = _lane_cfg(lane)
+        params = get_family(cfg).init_params(jax.random.PRNGKey(0), cfg)
+        trace = poisson_trace(np.random.default_rng(17), n_req, rate,
+                              cfg.vocab, plen, gen)
+        warm = [(0.0, list(range(1, chunk + 2)), 2)]  # compile warmup
+
+        results = {}
+        for mode in ("unchunked", "chunked"):
+            eng = Engine(cfg, params, max_len=max_len, seed=0,
+                         paged=True, block_size=block,
+                         sanitize=sanitize and mode == "chunked")
+            sched = Scheduler(eng, n_slots=n_slots, chunk_size=chunk,
+                              chunked_prefill=mode == "chunked")
+            _drive_wall(sched, warm)   # exclude warmup compiles
+            warm_compiles = eng.n_compiles
+            done, lat = _drive_wall(sched, trace)
+            results[mode] = (done, lat, warm_compiles, eng, sched)
+
+        done_u, lat_u, _, eng_u, _ = results["unchunked"]
+        done_c, lat_c, warm_c, eng_c, sched_c = results["chunked"]
+        ids = [r for r in done_u if r in lat_u]
+        assert done_u.keys() == done_c.keys()
+        for rid in done_u:
+            assert (done_u[rid].tokens == done_c[rid].tokens).all(), \
+                f"chunked prefill changed the tokens of request {rid}"
+        if not sanitize:
+            assert eng_c.n_compiles == warm_c, (
+                f"chunked engine compiled "
+                f"{eng_c.n_compiles - warm_c} new programs after "
+                f"warmup on the {lane} lane")
+        if sanitize:
+            assert sched_c.n_leaked == 0 and not sched_c.leak_report()
+        p99_u = float(np.percentile([lat_u[r] for r in ids], 99))
+        p99_c = float(np.percentile([lat_c[r] for r in ids], 99))
+        assert p99_c < p99_u, (
+            f"chunked prefill p99 wall latency {p99_c * 1e3:.0f} ms did "
+            f"not beat unchunked {p99_u * 1e3:.0f} ms on the {lane} "
+            f"lane (overload trace)")
+        rows.append((
+            f"serve_chunked_{lane}_b{n_slots}_n{n_req}_c{chunk}",
+            p99_c * 1e6,
+            f"p99_wall_ms={p99_c * 1e3:.1f} "
+            f"unchunked_p99_wall_ms={p99_u * 1e3:.1f} "
+            f"p99_speedup={p99_u / max(p99_c, 1e-9):.2f}x "
+            f"compiles={eng_c.n_compiles} "
+            f"unchunked_compiles={eng_u.n_compiles}"))
+    return rows
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     sanitize = "--sanitize" in argv
     print("name,us_per_call,derived")
-    if "--paged" in argv:
-        rows = run_paged_comparison(smoke=smoke, sanitize=sanitize)
+    sections = [f for f in ("--paged", "--prefix-share", "--chunked")
+                if f in argv]
+    if sections:                       # run ONLY the named sections
+        rows = []
+        if "--paged" in argv:
+            rows += run_paged_comparison(smoke=smoke, sanitize=sanitize)
         if "--prefix-share" in argv:
             rows += run_prefix_comparison(smoke=smoke, sanitize=sanitize)
-    elif "--prefix-share" in argv:
-        rows = run_prefix_comparison(smoke=smoke, sanitize=sanitize)
+        if "--chunked" in argv:
+            rows += run_chunked_comparison(smoke=smoke, sanitize=sanitize)
     else:
         rows = run(smoke=smoke, paged=not smoke)
         if smoke:

@@ -5,10 +5,11 @@ Prints ``name,us_per_call,derived`` CSV lines (harness contract).
   python -m benchmarks.run accuracy     # one suite
   python -m benchmarks.run serve --json # also write BENCH_serve.json
 
-``--json`` additionally writes one ``BENCH_<suite>.json`` per suite run:
-the same rows with the ``derived`` ``key=value`` pairs parsed into a
-dict (numbers as numbers), so the perf trajectory — serving tok/s,
-goodput, peak cache bytes — is machine-comparable across PRs.
+``--json`` additionally writes one ``benchmarks/BENCH_<suite>.json``
+per suite run (next to this file, regardless of the invoking CWD): the
+same rows with the ``derived`` ``key=value`` pairs parsed into a dict
+(numbers as numbers), so the perf trajectory — serving tok/s, goodput,
+peak cache bytes — is machine-comparable across PRs.
 
 ``benchmarks/baselines/BENCH_<suite>.json`` holds the committed
 baseline for a suite (seeded from the PR-6 run).  When one exists, each
@@ -43,7 +44,11 @@ def _parse_derived(derived: str) -> dict:
 
 
 def _write_json(suite: str, rows) -> str:
-    path = f"BENCH_{suite}.json"
+    # artifacts land next to this file, never in the invoking CWD (a
+    # repo-root BENCH_*.json was an easy stray to commit); committed
+    # baselines live one level deeper in benchmarks/baselines/
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        f"BENCH_{suite}.json")
     payload = [
         {"name": name, "us_per_call": float(us),
          "derived": _parse_derived(derived)}

@@ -1,4 +1,4 @@
-"""The positcheck rules (PVU001–PVU005).
+"""The positcheck rules (PVU001–PVU006).
 
 Each rule is a bug class this repo actually shipped (or nearly did);
 see the module docstring of :mod:`repro.analysis` and the "Invariants &
@@ -328,12 +328,99 @@ class PoolPrivateAccess(Rule):
                 )
 
 
+# ---------------------------------------------------------------------------
+# PVU006 — jit specialization on prompt-length-like static args
+
+
+class PromptLenSpecialization(Rule):
+    id = "PVU006"
+    severity = "error"
+    title = "jit static args specialize on a prompt-length-like value"
+    hint = (
+        "a jit whose static args carry a prompt/prefix/sequence length "
+        "compiles one program PER LENGTH — the recompile-per-prompt "
+        "stall chunked prefill (Engine.mixed_step, one compiled shape "
+        "for every request) deleted; feed lengths in as traced arrays "
+        "(per-row lens/n_valid) or route the dispatch through "
+        "runtime/engine.py, the one place allowed to manage jit caches"
+    )
+
+    ALLOWED_FILE = "runtime/engine.py"
+    JIT_NAMES = {"jit"}
+    # length-like: 'plen' itself, or a *_len name scoped to prompt-ish
+    # data.  Capacity statics (max_len, block/window sizes) stay legal.
+    SCOPES = ("prompt", "prefix", "seq", "suffix", "token")
+
+    def _length_like(self, name) -> bool:
+        n = str(name).lower()
+        if n in ("plen", "seqlen"):
+            return True
+        return "len" in n and any(s in n for s in self.SCOPES)
+
+    def _is_jit_call(self, node: ast.Call) -> bool:
+        leaf = self.call_name(node).rsplit(".", 1)[-1]
+        if leaf in self.JIT_NAMES:
+            return True
+        if leaf == "partial" and node.args:
+            first = self.dotted_name(node.args[0])
+            return first.rsplit(".", 1)[-1] in self.JIT_NAMES
+        return False
+
+    def check(self, mod: ModuleFile):
+        if _is_file(mod, self.ALLOWED_FILE):
+            return
+        fndefs = {
+            f.name: f for f in ast.walk(mod.tree)
+            if isinstance(f, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or not self._is_jit_call(node):
+                continue
+            for kw in node.keywords:
+                if kw.arg == "static_argnames":
+                    for sub in ast.walk(kw.value):
+                        if (isinstance(sub, ast.Constant)
+                                and isinstance(sub.value, str)
+                                and self._length_like(sub.value)):
+                            yield node, (
+                                "jit static_argnames includes prompt-"
+                                f"length-like {sub.value!r} — one "
+                                "compiled program per prompt length, "
+                                "outside the engine's jit caches"
+                            )
+                elif kw.arg == "static_argnums":
+                    # resolve indices against a locally defined wrapped
+                    # function, when one is named in the call
+                    target = None
+                    for a in node.args:
+                        nm = self.dotted_name(a).rsplit(".", 1)[-1]
+                        if nm in fndefs:
+                            target = fndefs[nm]
+                    if target is None:
+                        continue
+                    ta = target.args
+                    params = [p.arg for p in ta.posonlyargs + ta.args]
+                    for sub in ast.walk(kw.value):
+                        if (isinstance(sub, ast.Constant)
+                                and isinstance(sub.value, int)
+                                and 0 <= sub.value < len(params)
+                                and self._length_like(params[sub.value])):
+                            yield node, (
+                                "jit static_argnums position "
+                                f"{sub.value} is prompt-length-like "
+                                f"parameter {params[sub.value]!r} — one "
+                                "compiled program per prompt length, "
+                                "outside the engine's jit caches"
+                            )
+
+
 ALL_RULES: tuple[Rule, ...] = (
     RawCacheWrite(),
     RequantRoundTrip(),
     CacheDtypeSniff(),
     TracedBranch(),
     PoolPrivateAccess(),
+    PromptLenSpecialization(),
 )
 
 

@@ -33,14 +33,31 @@ dense path stays selectable (omit ``--paged``) for A/B comparison.
 ``--prefix-cache`` (with ``--continuous --paged``) deduplicates shared
 prompt prefixes: admission matches each prompt's leading full blocks
 against a content-addressed index of resident blocks, borrows the hits
-via refcounts and prefills only the unmatched suffix; writes into
-borrowed blocks copy-on-write first, so greedy token streams are
-unchanged.  ``--prefix-share`` generates the matching trace — every
-prompt opens with the same system prefix of that fractional length:
+via refcounts and skips their prefill chunks; writes into borrowed
+blocks copy-on-write first, so greedy token streams are unchanged.
+``--prefix-share`` generates the matching trace — every prompt opens
+with the same system prefix of that fractional length:
 
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
       --reduced --continuous --paged --prefix-cache --batch 4 \
       --n-requests 16 --prompt-len 32 --prefix-share 0.75 --block-size 4
+
+``--chunked-prefill`` (with ``--continuous --paged``) routes prompts
+through the decode lane in fixed ``--chunk-size``-token chunks, so ONE
+compiled dispatch shape serves every request and the engine's compile
+count stays flat no matter how ragged the prompt lengths are (implied
+by ``--prefix-cache``).  ``--deadline-ms`` attaches a completion
+deadline to every request — admission turns earliest-deadline-first
+and, when the pool is full, the scheduler preempts the latest-deadline
+row (releasing its blocks) to admit a more urgent one.  Deadlines are
+converted to the decode-step simulation clock at ``MS_PER_STEP`` ms
+per step (an assumed reference-hardware step time; the SIMULATED
+schedule is what the deadline shapes, wall time per step varies by
+host):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
+      --reduced --continuous --paged --chunked-prefill --batch 4 \
+      --n-requests 16 --deadline-ms 400 --chunk-size 4
 """
 from __future__ import annotations
 
@@ -58,6 +75,11 @@ from repro.compress.kvcache import cache_report
 from repro.models import get_family
 from repro.runtime.engine import Engine
 from repro.runtime.scheduler import Scheduler
+
+# assumed wall time of one decode step on the reference hardware, used
+# only to convert --deadline-ms into the decode-step simulation clock
+# (the schedule is simulated, so only the RATIO deadline/step matters)
+MS_PER_STEP = 10.0
 
 
 def poisson_trace(rng, n_requests, rate, vocab, prompt_len, gen):
@@ -93,17 +115,22 @@ def shared_prefix_trace(rng, n_requests, rate, vocab, prompt_len, gen,
     return out
 
 
-def drive_trace(sched: Scheduler, trace):
+def drive_trace(sched: Scheduler, trace, deadline_steps=None):
     """Feed a (arrival_step, prompt, gen) trace through a scheduler,
     advancing the simulation clock through idle gaps; returns
-    ``{rid: Completion}`` keyed in trace order."""
+    ``{rid: Completion}`` keyed in trace order.  ``deadline_steps``
+    attaches ``arrival + deadline_steps`` as every request's absolute
+    deadline (EDF admission + preemption; ``None`` = best-effort)."""
     pending = list(trace)
     done = {}
     order = {}
     while pending or sched.has_work:
         while pending and pending[0][0] <= sched.steps_run:
             t, prompt, gen = pending.pop(0)
-            rid = sched.submit(prompt, gen)
+            rid = sched.submit(
+                prompt, gen,
+                deadline=None if deadline_steps is None
+                else int(np.ceil(t)) + int(deadline_steps))
             order[rid] = len(order)
         if not sched.has_work:
             # idle: jump the decode-step clock to the next arrival
@@ -131,7 +158,12 @@ def run_continuous(args, cfg, params):
     engine = _build_engine(args, cfg, params, max_len)
     sched = Scheduler(engine, n_slots=args.batch,
                       chunk_size=args.chunk_size,
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache,
+                      chunked_prefill=args.chunked_prefill)
+    deadline_steps = None
+    if args.deadline_ms > 0:
+        deadline_steps = max(1, int(np.ceil(args.deadline_ms
+                                            / MS_PER_STEP)))
     if args.prefix_share > 0:
         trace = shared_prefix_trace(rng, args.n_requests,
                                     args.arrival_rate, cfg.vocab,
@@ -141,7 +173,7 @@ def run_continuous(args, cfg, params):
         trace = poisson_trace(rng, args.n_requests, args.arrival_rate,
                               cfg.vocab, args.prompt_len, args.gen)
     t0 = time.time()
-    done, _ = drive_trace(sched, trace)
+    done, _ = drive_trace(sched, trace, deadline_steps=deadline_steps)
     dt = time.time() - t0
     rep = cache_report(sched.cache)
 
@@ -164,6 +196,18 @@ def run_continuous(args, cfg, params):
               f"{args.batch * sched.table_width}); peak in use "
               f"{sched.pool.peak_in_use}, peak committed "
               f"{sched.peak_committed}")
+    if sched.chunked:
+        print(f"  chunked prefill: {sched.prefill_tokens} prompt tokens "
+              f"through the decode lane in {args.chunk_size}-token "
+              f"chunks; {engine.n_compiles} compiled programs "
+              f"(flat across prompt lengths)")
+    if deadline_steps is not None:
+        missed = sum(1 for c in done.values()
+                     if c.finished_step > c.arrival_step + deadline_steps)
+        print(f"  deadlines: {args.deadline_ms:.0f} ms "
+              f"({deadline_steps} steps at {MS_PER_STEP:.0f} ms/step); "
+              f"{len(done) - missed}/{len(done)} met, "
+              f"{sched.n_preempted} preemptions")
     if args.prefix_cache:
         print(f"  prefix cache: {sched.prefix_hits}/{len(done)} "
               f"admissions hit, {sched.prefix_matched_tokens} prompt "
@@ -221,6 +265,20 @@ def main(argv=None):
                          "--paged): admissions borrow already-resident "
                          "prompt blocks and prefill only the unmatched "
                          "suffix; greedy token streams are unchanged")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="feed prompts through the decode lane in fixed "
+                         "chunk-size-token chunks (with --continuous "
+                         "--paged): one compiled dispatch shape serves "
+                         "every request, so the engine never "
+                         "jit-specializes on a prompt length "
+                         "(implied by --prefix-cache)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="with --continuous: per-request completion "
+                         "deadline in milliseconds, converted to the "
+                         "decode-step simulation clock at MS_PER_STEP "
+                         "ms per step; drives EDF admission and "
+                         "preemption-by-block-release (0 = best-effort "
+                         "FIFO)")
     ap.add_argument("--prefix-share", type=float, default=0.0,
                     help="with --continuous: fraction of each prompt "
                          "drawn from ONE shared system prefix (0 = fully "
@@ -229,6 +287,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.prefix_cache and not (args.continuous and args.paged):
         ap.error("--prefix-cache requires --continuous --paged")
+    if args.chunked_prefill and not (args.continuous and args.paged):
+        ap.error("--chunked-prefill requires --continuous --paged")
+    if args.deadline_ms > 0 and not args.continuous:
+        ap.error("--deadline-ms requires --continuous")
 
     cfg = configs.get_config(args.arch)
     if args.reduced:

@@ -187,14 +187,31 @@ def _attn_context_parallel(q, k, v, cfg: ModelConfig):
 
 
 def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
-                    window: int = 0, q_offset: int = 0, kv_mask=None):
+                    window: int = 0, q_offset: int = 0, kv_mask=None,
+                    q_positions=None):
     """q: (B,S,H,D); k,v: (B,T,G,D[v]) grouped-query; returns (B,S,H,Dv).
 
     Scans KV in blocks with an online-softmax carry; the causal variant
     optionally skips strictly-future blocks with lax.cond.
 
     ``kv_mask``: optional (B, T) bool — False keys are excluded for that
-    batch row (left-padded ragged prompts in the serving engine).
+    batch row (left-padded ragged prompts in the serving engine, padded
+    or garbage cache slots in the chunked-prefill lane).
+
+    ``q_positions``: optional (B, S) int32 absolute position per query
+    (chunked prefill: every batch row sits at its own cache frontier);
+    overrides the shared ``q_offset + arange`` positions, making the
+    causal/window bias per-row.
+
+    KV is always padded up to a multiple of ``cfg.attn_chunk_kv``, so
+    KV block ``i`` covers absolute positions ``[i*kc, (i+1)*kc)`` no
+    matter the total KV length: a full-prompt prefill and a chunked
+    prefill reading back the same positions reduce in bitwise-identical
+    groups (the scheduler's chunked-mode identity guarantee).  Padded
+    keys are excluded via ``kv_mask``; once the running max is finite a
+    fully-masked block is an exact no-op (``exp`` underflows to 0), and
+    leading fully-masked blocks are annihilated exactly by the first
+    valid block's ``alpha = exp(-1e30 - m) == 0`` rescale.
     """
     q, k, v = _attn_context_parallel(q, k, v, cfg)
     b, s_len, h, d = q.shape
@@ -203,8 +220,16 @@ def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
     r = h // g
     scale = d ** -0.5
     qc = _pick_chunk(s_len, cfg.attn_chunk_q)
-    kc = _pick_chunk(t_len, cfg.attn_chunk_kv)
-    n_q, n_k = s_len // qc, t_len // kc
+    kc = int(cfg.attn_chunk_kv)
+    t_pad = -(-t_len // kc) * kc
+    if t_pad != t_len:
+        pad = t_pad - t_len
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_mask is None:
+            kv_mask = jnp.ones((b, t_len), bool)
+        kv_mask = jnp.pad(kv_mask, ((0, 0), (0, pad)))
+    n_q, n_k = s_len // qc, t_pad // kc
 
     qg = (q.reshape(b, n_q, qc, g, r, d).transpose(1, 0, 3, 4, 2, 5)
           * scale)                                          # (nq,B,G,R,qc,D)
@@ -213,12 +238,16 @@ def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
     km = (kv_mask.reshape(b, n_k, kc).transpose(1, 0, 2)
           if kv_mask is not None else None)                 # (nk,B,kc)
 
-    q_pos = q_offset + jnp.arange(s_len).reshape(n_q, qc)
-    k_pos = jnp.arange(t_len).reshape(n_k, kc)
+    if q_positions is not None:
+        q_pos = jnp.asarray(q_positions, jnp.int32) \
+            .reshape(b, n_q, qc).transpose(1, 0, 2)         # (nq,B,qc)
+    else:
+        q_pos = q_offset + jnp.arange(s_len).reshape(n_q, qc)
+    k_pos = jnp.arange(t_pad).reshape(n_k, kc)
 
     def one_q_chunk(qi):
         qblk = qg[qi]
-        qp = q_pos[qi]                                      # (qc,)
+        qp = q_pos[qi]                                      # (qc,) | (B,qc)
 
         def kv_step(carry, ki):
             m, l, acc = carry
@@ -226,12 +255,17 @@ def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
 
             def compute(args):
                 m, l, acc = args
+                # qp[..., :, None] - kp broadcasts to (qc,kc) for shared
+                # positions or (B,qc,kc) for per-row positions
                 bias = jnp.zeros((qc, kc), jnp.float32)
                 if causal:
-                    bias = jnp.where(qp[:, None] >= kp[None, :], 0.0, _NEG)
+                    bias = jnp.where(
+                        qp[..., :, None] >= kp, 0.0, _NEG)
                 if window:
                     bias = bias + jnp.where(
-                        qp[:, None] - kp[None, :] < window, 0.0, _NEG)
+                        qp[..., :, None] - kp < window, 0.0, _NEG)
+                if bias.ndim == 3:                          # per-row bias
+                    bias = bias[:, None, None]              # (B,1,1,qc,kc)
                 sblk = _attn_block(qblk, kblk, vblk, bias)  # (B,G,R,qc,kc)
                 if km is not None:
                     sblk = jnp.where(
@@ -246,9 +280,9 @@ def flash_attention(q, k, v, *, causal: bool, cfg: ModelConfig,
                 return m_new, l_new, acc_new
 
             if causal and cfg.causal_skip == "cond":
-                relevant = kp[0] <= qp[-1]
+                relevant = kp[0] <= qp.max()
                 if window:
-                    relevant &= (qp[0] - kp[-1]) < window
+                    relevant &= (qp.min() - kp[-1]) < window
                 m, l, acc = lax.cond(relevant, compute,
                                      lambda a: a, (m, l, acc))
             else:
@@ -563,24 +597,6 @@ def paged_pack(arena, kvs, tables, lens, *, window: int = 0,
         (kvs.shape[0], b * w, bs) + kvs.shape[3:])
     ids = jnp.asarray(tables, jnp.int32).reshape(-1)
     return arena.at[:, ids].set(blocks, mode="drop")
-
-
-def paged_gather_layers(arena, block_ids):
-    """Stacked-layer arena (L, nb, bs, ...) + (W,) physical block ids ->
-    one row-contiguous virtual cache (L, 1, W*bs, ...).
-
-    The batch-1 companion of :func:`paged_gather` for host-orchestrated
-    admission: the prefix-sharing suffix prefill gathers the borrowed
-    prefix blocks of ONE request across all layers at once, so the
-    attention context it rebuilds is byte-identical to what the paged
-    decode lane would gather.  Sentinel ids clamp into an arbitrary
-    real block; the caller's static prefix length excludes them.
-    """
-    nb = arena.shape[1]
-    ids = jnp.clip(jnp.asarray(block_ids, jnp.int32), 0, nb - 1)
-    g = jnp.take(arena, ids, axis=1)            # (L, W, bs, ...)
-    w, bs = g.shape[1], g.shape[2]
-    return g.reshape((arena.shape[0], 1, w * bs) + arena.shape[3:])
 
 
 def paged_copy_blocks(arena, src_ids, dst_ids):

@@ -20,7 +20,6 @@ the ring-buffer sliding-window lane).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -442,58 +441,145 @@ def prefill(params, tokens, cfg: ModelConfig, visual=None, *,
     return cache, logits
 
 
-def prefill_suffix(params, tokens, cfg: ModelConfig, prefix: dict,
-                   prefix_len: int):
-    """Prefill ONLY the unmatched suffix of a prompt whose leading
-    ``prefix_len`` tokens are already resident in shared arena blocks.
+def _zero_invalid(x, mask):
+    """Zero time-axis slots whose (B, T) mask is False.  Gathered arena
+    garbage (evicted ring blocks, sentinel clamps, sanitizer poison) is
+    finite-but-absurd; zeroing keeps the dead slots' downstream matmuls
+    finite, and valid slots are untouched, so it cannot perturb the
+    chunked-prefill identity."""
+    return jnp.where(mask.reshape(mask.shape + (1,) * (x.ndim - 2)), x, 0)
 
-    ``tokens``: (1, S_suf) int32 suffix tokens at absolute positions
-    ``prefix_len .. prefix_len + S_suf - 1``.  ``prefix``: the gathered
-    prefix content leaves (``k``/``v`` dense, ``c_kv``/``k_rope`` MLA),
-    each (L, 1, P, ...) with ``P >= prefix_len`` — the tail past
-    ``prefix_len`` is block-rounding garbage and is sliced off
-    (``prefix_len`` must be static for exactly that reason).
 
-    Returns ``(suffix_kvs, logits)``: storage-dtype suffix KV leaves
-    (L, 1, S_suf, ...) ready for ``paged_pack_range``, and the (1, V)
-    logits at the prompt's last position.
+def _chunk_virtual_tables(tables, lens, bs: int, window: int,
+                          virtual_width: int, n_blocks: int):
+    """Position-ORDERED virtual block tables for the chunked-prefill
+    gather: virtual block ``vb`` of row ``b`` names the physical block
+    holding absolute positions ``[vb*bs, (vb+1)*bs)``, or the sentinel.
 
-    Numerics: each suffix query attends over
-    ``concat(prefix_kv, suffix_kv)`` — total KV length equals the full
-    prompt length, so ``flash_attention`` picks the same KV chunking as
-    a full prefill would and every suffix position's hidden state is
-    BIT-IDENTICAL to the full-prefill path whenever the cache storage
-    dtype is the compute dtype (pinned in ``tests/test_prefix.py``).
-    With a posit KV codec the shared prefix is read back through
-    quantize->dequantize (exactly what paged decode reads), so suffix
-    activations can differ from a from-scratch prefill in the last ulp
-    — the stored prefix KV bytes themselves are identical either way.
+    Dense/MLA tables are already position-ordered (pad with sentinels to
+    the virtual width).  The window ring stores logical block ``q`` at
+    slot ``q % W``; pre-chunk, exactly blocks ``lb_max-W+1 .. lb_max``
+    (``lb_max = (lens-1)//bs``) hold their latest content, so those map
+    through the ring and everything else is the sentinel.  The ring
+    invariant ``W*bs >= window + bs`` puts every position below
+    ``lb_min*bs`` strictly out of the window of every query at position
+    ``>= lens`` — evicted content is never needed.
+
+    Returns ``(vtables (B, virtual_width), low_pos (B,))`` where
+    ``low_pos`` is the first position the gather actually covers."""
+    b, w = tables.shape
+    vw = int(virtual_width)
+    if L.paged_is_window_lane(window, bs, w):
+        lens = jnp.asarray(lens, jnp.int32)
+        lb_max = (lens - 1) // bs                         # -1 at lens == 0
+        lb_min = jnp.maximum(lb_max - w + 1, 0)
+        vb = jnp.arange(vw, dtype=jnp.int32)[None, :]
+        slot = jnp.broadcast_to(lax.rem(vb, w), (b, vw))
+        phys = jnp.take_along_axis(tables, slot, axis=1)
+        resident = (vb >= lb_min[:, None]) & (vb <= lb_max[:, None])
+        vtables = jnp.where(resident, phys, n_blocks)
+        return vtables, lb_min * bs
+    if vw < w:
+        raise ValueError(
+            f"chunked prefill virtual width {vw} < table width {w}")
+    if vw > w:
+        tables = jnp.concatenate(
+            [tables, jnp.full((b, vw - w), n_blocks, jnp.int32)], axis=1)
+    return tables, jnp.zeros((b,), jnp.int32)
+
+
+def prefill_chunk(params, cache, tokens, cfg: ModelConfig, n_valid, *,
+                  virtual_width: int, write_tables=None):
+    """Process ``C`` prompt tokens per row against the PAGED cache — the
+    chunked-prefill step that makes every prompt length flow through one
+    compiled dispatch shape.
+
+    ``tokens``: (B, C) int32 — row b's next prompt tokens for absolute
+    positions ``lens[b] .. lens[b]+C-1``; only the first ``n_valid[b]``
+    are real (pad the tail with any valid token id — its KV is computed
+    but neither written nor attended).  Rows with ``n_valid == 0`` (idle
+    or decode-only slots) are exact no-ops: nothing is written and their
+    ``lens`` is unchanged.
+
+    ``virtual_width``: static ``ceil(max_len / block_size)`` — the
+    position-ordered virtual cache width every lane gathers (the window
+    ring is unfolded into it, see ``_chunk_virtual_tables``).
+
+    ``write_tables``: optional (B, W) tables for the arena WRITE
+    (``paged_pack_range``); defaults to ``cache['block_tables']``.  The
+    prefix-sharing scheduler passes a copy with borrowed entries
+    sentineled so a shared block never takes even a byte-identical
+    write-back.
+
+    Returns ``(new_cache, logits)`` with ``logits`` (B, V) taken at each
+    row's LAST VALID chunk position (meaningful only for rows whose
+    prefill completes in this chunk).
+
+    Numerics — the chunked = whole-prompt identity: ``flash_attention``
+    groups KV in fixed ``[i*kc, (i+1)*kc)`` blocks regardless of total
+    KV length, every resident position's bytes equal what the full
+    prefill computed (exactly, when the KV storage dtype is the compute
+    dtype), fresh chunk KV is inserted into the virtual buffer BEFORE
+    attention (so it is read pre-codec, like a full prefill), and every
+    non-resident slot is replace-masked to the same ``-1e30`` a full
+    prefill's causal/window bias produces.  Hence each chunk position's
+    hidden state is bit-identical to the whole-prompt path (pinned in
+    ``tests/test_paged.py`` / ``tests/test_prefix.py``); with a posit KV
+    codec, prior-chunk context is read back through the codec (exactly
+    what decode reads), so later chunks can differ from a from-scratch
+    prefill in the last ulp.  MoE capacity dispatch sees ``C`` tokens
+    per call instead of the whole prompt, so under capacity-pressure
+    token dropping the identity only holds for non-MoE configs.
     """
     from repro.core.convert import posit_to_f32
+    from repro.core.tracing import is_tracer
 
-    b, s_suf = tokens.shape
-    if b != 1:
-        raise ValueError(
-            f"prefill_suffix is the batch-1 admission lane, got B={b}")
-    prefix_len = int(prefix_len)
-    positions = prefix_len + jnp.arange(s_suf)[None, :]
+    b, c = tokens.shape
+    tables = cache["block_tables"]
+    arena_key = "c_kv" if cfg.mla else "k"
+    nb, bs = cache[arena_key].shape[1], cache[arena_key].shape[2]
+    window = _paged_window(cfg)
+    lens = jnp.asarray(cache["lens"], jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    lens_after = lens + n_valid
+    if not is_tracer(lens_after) and not is_tracer(cache["max_len"]):
+        import numpy as _np
+        la = _np.asarray(lens_after)
+        if la.size and int(la.max()) > int(cache["max_len"]):
+            raise ValueError(
+                f"prefill_chunk: row frontier {int(la.max())} would "
+                f"exceed max_len {int(cache['max_len'])}")
 
-    def load(leaf):
-        leaf = leaf[:, :, :prefix_len]
+    positions = lens[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    vtables, low_pos = _chunk_virtual_tables(
+        tables, lens, bs, window, virtual_width, nb)
+    t_len = int(virtual_width) * bs
+    apos = jnp.arange(t_len, dtype=jnp.int32)[None, :]    # (1, T)
+    resident = (apos < lens[:, None]) & (apos >= low_pos[:, None])
+    kv_mask = (apos < lens_after[:, None]) & (apos >= low_pos[:, None])
+    bidx = jnp.arange(b)[:, None]
+
+    def load(arena):
+        g = L.paged_gather(arena, vtables)                # (B, T, ...)
         if cfg.kv_posit:
-            leaf = posit_to_f32(leaf, L.pcfg(cfg.kv_posit))
-        return leaf.astype(L.cdtype(cfg))
+            g = posit_to_f32(g, L.pcfg(cfg.kv_posit))
+        return _zero_invalid(g.astype(L.cdtype(cfg)), resident)
+
+    def insert(ctx, fresh):
+        # scatter row b's fresh chunk at virtual slots lens[b]+j; pad
+        # positions past the virtual buffer drop (never clamp)
+        return ctx.at[bidx, positions].set(fresh, mode="drop")
 
     x = _embed(params, tokens, cfg)
 
     if cfg.mla:
         def body(h, layer):
-            lp, pc, pr = layer
+            lp, c_a, r_a = layer
             hn = L.rms_norm(lp["ln1"], h, cfg)
             q_lat = L.rms_norm(lp["attn"]["q_norm"],
                                L.dense(lp["attn"]["wdq"], hn, cfg), cfg)
             q = L.dense(lp["attn"]["wuq"], q_lat, cfg).reshape(
-                b, s_suf, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
+                b, c, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
             q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
             q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
             q = jnp.concatenate([q_nope, q_rope], -1)
@@ -504,67 +590,70 @@ def prefill_suffix(params, tokens, cfg: ModelConfig, prefix: dict,
             r_suf = L.apply_rope(r_suf[:, :, None, :], positions,
                                  cfg.rope_theta)[:, :, 0, :]
 
-            c_all = jnp.concatenate([pc, c_suf], axis=1)    # (1, plen, rank)
-            r_all = jnp.concatenate([pr, r_suf], axis=1)
-            plen = c_all.shape[1]
+            c_all = insert(load(c_a), c_suf)              # (B, T, rank)
+            r_all = insert(load(r_a), r_suf)
             k_nope = L.dense(lp["attn"]["wuk"], c_all, cfg).reshape(
-                b, plen, cfg.n_heads, cfg.qk_nope_dim)
+                b, t_len, cfg.n_heads, cfg.qk_nope_dim)
             v = L.dense(lp["attn"]["wuv"], c_all, cfg).reshape(
-                b, plen, cfg.n_heads, cfg.v_head_dim)
+                b, t_len, cfg.n_heads, cfg.v_head_dim)
             k = jnp.concatenate(
                 [k_nope, jnp.broadcast_to(
                     r_all[:, :, None, :],
-                    (b, plen, cfg.n_heads, cfg.qk_rope_dim))], -1)
+                    (b, t_len, cfg.n_heads, cfg.qk_rope_dim))], -1)
             out = L.flash_attention(q, k, v, causal=True, cfg=cfg,
-                                    q_offset=prefix_len)
-            out = out.reshape(b, s_suf, cfg.n_heads * cfg.v_head_dim)
-            a = L.dense(lp["attn"]["wo"], out, cfg)
-            h = h + a
+                                    kv_mask=kv_mask, q_positions=positions)
+            out = out.reshape(b, c, cfg.n_heads * cfg.v_head_dim)
+            h = h + L.dense(lp["attn"]["wo"], out, cfg)
             hh = L.rms_norm(lp["ln2"], h, cfg)
             f = L.moe(lp["moe"], hh, cfg) if cfg.is_moe else \
                 L.mlp(lp["mlp"], hh, cfg)
             return h + f, (_maybe_quant_kv(c_suf, cfg),
                            _maybe_quant_kv(r_suf, cfg))
 
-        x, (c_new, r_new) = lax.scan(
-            body, x, (params["layers"],
-                      load(prefix["c_kv"]), load(prefix["k_rope"])))
-        kvs = {"c_kv": c_new, "k_rope": r_new}
+        x, kv_new = lax.scan(
+            body, x, (params["layers"], cache["c_kv"], cache["k_rope"]))
+        keys = ("c_kv", "k_rope")
     else:
         def body(h, layer):
-            lp, pk, pv = layer
+            lp, k_a, v_a = layer
             hn = L.rms_norm(lp["ln1"], h, cfg)
             q = L.dense(lp["attn"]["wq"], hn, cfg).reshape(
-                b, s_suf, cfg.n_heads, cfg.head_dim)
+                b, c, cfg.n_heads, cfg.head_dim)
             k_suf = L.dense(lp["attn"]["wk"], hn, cfg).reshape(
-                b, s_suf, cfg.n_kv_heads, cfg.head_dim)
+                b, c, cfg.n_kv_heads, cfg.head_dim)
             v_suf = L.dense(lp["attn"]["wv"], hn, cfg).reshape(
-                b, s_suf, cfg.n_kv_heads, cfg.head_dim)
+                b, c, cfg.n_kv_heads, cfg.head_dim)
             q = L.apply_rope(q, positions, cfg.rope_theta)
             k_suf = L.apply_rope(k_suf, positions, cfg.rope_theta)
-            k = jnp.concatenate([pk, k_suf], axis=1)
-            v = jnp.concatenate([pv, v_suf], axis=1)
+            k = insert(load(k_a), k_suf)                  # (B, T, G, D)
+            v = insert(load(v_a), v_suf)
             out = L.flash_attention(q, k, v, causal=True, cfg=cfg,
                                     window=cfg.sliding_window,
-                                    q_offset=prefix_len)
-            out = out.reshape(b, s_suf, cfg.n_heads * cfg.head_dim)
-            a = L.dense(lp["attn"]["wo"], out, cfg)
-            h = h + a
+                                    kv_mask=kv_mask, q_positions=positions)
+            out = out.reshape(b, c, cfg.n_heads * cfg.head_dim)
+            h = h + L.dense(lp["attn"]["wo"], out, cfg)
             hh = L.rms_norm(lp["ln2"], h, cfg)
             f = L.moe(lp["moe"], hh, cfg) if cfg.is_moe else \
                 L.mlp(lp["mlp"], hh, cfg)
             return h + f, (_maybe_quant_kv(k_suf, cfg),
                            _maybe_quant_kv(v_suf, cfg))
 
-        x, (k_new, v_new) = lax.scan(
-            body, x, (params["layers"],
-                      load(prefix["k"]), load(prefix["v"])))
-        kvs = {"k": k_new, "v": v_new}
+        x, kv_new = lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        keys = ("k", "v")
+
+    wt = tables if write_tables is None else \
+        jnp.asarray(write_tables, jnp.int32)
+    new_cache = dict(cache, lens=lens_after)
+    for key, kv in zip(keys, kv_new):
+        new_cache[key] = L.paged_pack_range(
+            cache[key], kv, wt, lens, lens_after, window=window)
 
     x = L.rms_norm(params["final_norm"], x, cfg)
-    last = x[:, -1:, :]
+    last = jnp.take_along_axis(
+        x, jnp.clip(n_valid - 1, 0, c - 1)[:, None, None], axis=1)
     logits = (last @ _unembed_weight(params, cfg).astype(x.dtype))
-    return kvs, logits[:, 0, :].astype(jnp.float32)
+    return new_cache, logits[:, 0, :].astype(jnp.float32)
 
 
 def _decode_attn_dense(p, x, k_cache, v_cache, pos, lens, cfg: ModelConfig):

@@ -23,7 +23,11 @@ clamps out-of-range starts).  The engine:
   transformer family): a block arena + per-row block tables replaces
   the dense ``batch x max_len`` preallocation, rows allocate blocks
   from a host-side ``kvcache.BlockPool`` as they grow, and the token
-  streams are byte-identical to the dense layout's.
+  streams are byte-identical to the dense layout's;
+* serves **chunked prefill** through :meth:`Engine.mixed_step`: fixed
+  ``C``-token prompt chunks and masked decode steps share ONE compiled
+  dispatch shape keyed ``("mixed", C, n_steps)``, so prompt length
+  never jit-specializes anything (``n_compiles`` stays flat).
 
 Usage::
 
@@ -116,6 +120,30 @@ class Engine:
         self._key = jax.random.PRNGKey(seed)
         self._prefill_jit = {}
         self._decode_jit = {}
+
+    @property
+    def n_compiles(self) -> int:
+        """Distinct lowered programs this engine has compiled: the sum
+        of every cached jit callable's trace-cache size, so per-shape
+        retraces INSIDE one callable count too (the unchunked prefill
+        path retraces per padded prompt length without ever missing the
+        engine's own jit cache).  The scheduler surfaces it in
+        ``Scheduler.stats``; chunked-prefill mode pins it flat after
+        warmup no matter how ragged the admitted prompt lengths are
+        (tests/test_scheduler.py)."""
+        n = 0
+        for store in (self._prefill_jit, self._decode_jit):
+            for fn in store.values():
+                sz = getattr(fn, "_cache_size", None)
+                n += sz() if callable(sz) else 1
+        return n
+
+    def _get_jit(self, store: dict, key, build):
+        """Jit-cache lookup: a miss builds one new jitted callable
+        (whose compilations ``n_compiles`` then tracks)."""
+        if key not in store:
+            store[key] = build()
+        return store[key]
 
     # ------------------------------------------------------------------
     # prompt packing
@@ -226,72 +254,109 @@ class Engine:
                 lens, int(reserve_tokens), nb)
             args.append(jnp.asarray(tables))
         key = (ragged, tuple(sorted(kw)), nb)
-        if key not in self._prefill_jit:
-            self._prefill_jit[key] = self._prefill_fn(
-                ragged, tuple(sorted(kw)), n_blocks=nb)
-        cache, logits = self._prefill_jit[key](
+        fn = self._get_jit(self._prefill_jit, key,
+                           lambda: self._prefill_fn(
+                               ragged, tuple(sorted(kw)), n_blocks=nb))
+        cache, logits = fn(
             self.params, jnp.asarray(tokens), jnp.asarray(lens), *args)
         return cache, logits, lens
 
     # ------------------------------------------------------------------
-    # prefix sharing: suffix prefill + COW block copies (paged only)
+    # mixed dispatch: prefill chunks + decode steps, one compiled shape
     # ------------------------------------------------------------------
 
-    def _suffix_fn(self, plen: int, prefix_len: int):
-        from repro.models import layers as L
+    def _mixed_fn(self, n_steps: int):
+        """One compiled program = one prefill chunk over every row
+        (rows with ``n_valid == 0`` are exact no-ops) followed by
+        ``n_steps`` masked decode steps.  The shapes depend only on
+        (batch, chunk width, n_steps) — never on any prompt length — so
+        a scheduler running in chunked mode compiles this ONCE and
+        serves every request with it."""
         from repro.models import transformer as T
-        cfg = self.cfg
-        win = T._paged_window(cfg)
-        keys = ("c_kv", "k_rope") if cfg.mla else ("k", "v")
+        cfg, fam, temp = self.cfg, self.fam, self.temperature
+        vw = -(-self.max_len // self.block_size)
 
-        def run(params, cache, tokens, gather_ids, table):
-            prefix = {k: L.paged_gather_layers(cache[k], gather_ids)
-                      for k in keys}
-            kvs, logits = T.prefill_suffix(params, tokens, cfg, prefix,
-                                           prefix_len)
-            lens = jnp.full((1,), plen, jnp.int32)
-            out = dict(cache)
-            for k in keys:
-                out[k] = L.paged_pack_range(
-                    cache[k], kvs[k], table[None], prefix_len, lens,
-                    window=win)
-            return out, logits
+        def run(params, cache, chunk_tokens, n_valid, tok, key,
+                decode_active, write_tables):
+            cache, chunk_logits = T.prefill_chunk(
+                params, cache, chunk_tokens, cfg, n_valid,
+                virtual_width=vw, write_tables=write_tables)
+
+            def step(carry, _):
+                cache, tok, key = carry
+                logits, cache = fam.decode_step(params, cache, tok, cfg,
+                                                active=decode_active)
+                nxt, key = sample_token(logits, key, temp)
+                return (cache, nxt, key), nxt
+
+            (cache, _, key), toks = lax.scan(
+                step, (cache, tok, key), length=n_steps)
+            return cache, chunk_logits, toks.T, key
 
         return jax.jit(run)
 
-    def prefill_suffix(self, prompt, cache, gather_ids, write_table,
-                       prefix_len: int):
-        """Prefix-sharing admission: prefill ONLY ``prompt[prefix_len:]``
-        of a batch-1 request whose leading tokens are resident in shared
-        arena blocks, writing the suffix KV straight into ``cache``'s
-        arena leaves.
+    def mixed_step(self, cache, chunk_tokens, n_valid, tokens,
+                   n_steps: int, *, decode_active=None,
+                   write_tables=None):
+        """Advance prefilling AND decoding rows in one compiled dispatch
+        (paged transformer engines only).
 
-        ``gather_ids``: (Wp,) physical ids of the borrowed prefix blocks
-        (``Wp * block_size >= prefix_len``); ``write_table``: the row's
-        full (W,) table with every still-borrowed entry replaced by the
-        sentinel so shared blocks can never take a write through this
-        path.  Returns ``(cache, logits)`` with updated content leaves
-        and the (1, V) last-position logits.  Jit-specialized per
-        (prompt length, prefix length) pair, like admission prefill is
-        per prompt length.
+        Phase 1 runs ``T.prefill_chunk``: row ``b`` appends
+        ``chunk_tokens[b, :n_valid[b]]`` at positions ``lens[b]...`` of
+        its paged cache (``n_valid[b] == 0`` rows — decoding or idle —
+        are untouched).  Phase 2 runs ``n_steps`` masked decode steps
+        for rows with ``decode_active`` set, fed by ``tokens`` (the last
+        sampled token per row; garbage for non-decoding rows, whose
+        writes are dropped).  ``write_tables``: per-row tables with
+        borrowed (shared) entries sentineled so prefix blocks never take
+        a write — defaults to ``cache["block_tables"]``.
+
+        Returns ``(cache, chunk_logits (B, V), toks (B, n_steps))``:
+        ``chunk_logits[b]`` is the logits at row ``b``'s last valid
+        chunk position (sample tok0 from it when the chunk completes the
+        prompt); ``toks`` are the decode samples (discard inactive
+        rows').  Jit key is ``("mixed", C, n_steps)`` — compiled once
+        per (chunk width, decode quantum), independent of every prompt
+        length in flight.
         """
         if not self.paged:
-            raise ValueError("prefill_suffix needs Engine(paged=True)")
-        plen = len(prompt)
-        prefix_len = int(prefix_len)
-        if not 0 < prefix_len <= plen - 2:
-            raise ValueError(
-                f"prefix_len {prefix_len} outside [1, plen-2={plen - 2}]"
-                " (>= 2 suffix tokens keep the matmul shapes off the "
-                "bitwise-divergent length-1 path)")
-        toks = jnp.asarray(prompt, jnp.int32)[None, prefix_len:]
-        key = ("suffix", plen, prefix_len, len(gather_ids))
-        if key not in self._prefill_jit:
-            self._prefill_jit[key] = self._suffix_fn(plen, prefix_len)
-        return self._prefill_jit[key](
-            self.params, cache, toks,
-            jnp.asarray(gather_ids, jnp.int32),
-            jnp.asarray(write_table, jnp.int32))
+            raise ValueError("mixed_step needs Engine(paged=True)")
+        from repro.core.tracing import is_tracer
+        chunk_tokens = jnp.asarray(chunk_tokens, jnp.int32)
+        b, c = chunk_tokens.shape
+        nv = np.asarray(n_valid, np.int32)
+        act = np.zeros((b,), bool) if decode_active is None \
+            else np.asarray(decode_active, bool)
+        lens = cache["lens"]
+        if not is_tracer(lens):
+            lens_np = np.asarray(lens)
+            if (nv > 0).any():
+                hi = int((lens_np + nv)[nv > 0].max())
+                if hi > self.max_len:
+                    raise ValueError(
+                        f"mixed_step: prefill chunk frontier {hi} "
+                        f"exceeds engine max_len {self.max_len}")
+            if act.any():
+                hi = int(lens_np[act].max())
+                if hi + int(n_steps) > self.max_len:
+                    raise ValueError(
+                        f"mixed_step: decode frontier {hi} + "
+                        f"{int(n_steps)} steps exceeds engine max_len "
+                        f"{self.max_len}; retire rows first")
+        wt = cache["block_tables"] if write_tables is None \
+            else jnp.asarray(write_tables, jnp.int32)
+        key = ("mixed", int(c), int(n_steps))
+        fn = self._get_jit(self._decode_jit, key,
+                           lambda: self._mixed_fn(int(n_steps)))
+        cache, chunk_logits, toks, self._key = fn(
+            self.params, cache, chunk_tokens, jnp.asarray(nv),
+            jnp.asarray(tokens, jnp.int32), self._key,
+            jnp.asarray(act), wt)
+        return cache, chunk_logits, toks
+
+    # ------------------------------------------------------------------
+    # prefix sharing: COW block copies + sanitizer poison (paged only)
+    # ------------------------------------------------------------------
 
     def copy_blocks(self, cache, src_ids, dst_ids):
         """COW device half: duplicate arena blocks ``src_ids -> dst_ids``
@@ -299,17 +364,19 @@ class Engine:
         dequantize round-trip).  Jit-specialized per copy count."""
         from repro.models import layers as L
         keys = ("c_kv", "k_rope") if self.cfg.mla else ("k", "v")
-        key = ("copy", len(src_ids))
-        if key not in self._decode_jit:
+
+        def build():
             def run(cache, src, dst):
                 out = dict(cache)
                 for k in keys:
                     out[k] = L.paged_copy_blocks(cache[k], src, dst)
                 return out
-            self._decode_jit[key] = jax.jit(run)
-        return self._decode_jit[key](
-            cache, jnp.asarray(src_ids, jnp.int32),
-            jnp.asarray(dst_ids, jnp.int32))
+            return jax.jit(run)
+
+        fn = self._get_jit(self._decode_jit, ("copy", len(src_ids)),
+                           build)
+        return fn(cache, jnp.asarray(src_ids, jnp.int32),
+                  jnp.asarray(dst_ids, jnp.int32))
 
     def poison_blocks(self, cache, ids):
         """Sanitizer device half: overwrite reclaimed arena blocks with
@@ -321,15 +388,17 @@ class Engine:
             return cache
         from repro.models import layers as L
         keys = ("c_kv", "k_rope") if self.cfg.mla else ("k", "v")
-        key = ("poison", len(ids))
-        if key not in self._decode_jit:
+
+        def build():
             def run(cache, ids):
                 out = dict(cache)
                 for k in keys:
                     out[k] = L.paged_poison_blocks(cache[k], ids)
                 return out
-            self._decode_jit[key] = jax.jit(run)
-        return self._decode_jit[key](cache, jnp.asarray(ids, jnp.int32))
+            return jax.jit(run)
+
+        fn = self._get_jit(self._decode_jit, ("poison", len(ids)), build)
+        return fn(cache, jnp.asarray(ids, jnp.int32))
 
     # ------------------------------------------------------------------
     # decode: one lax.scan == one compiled call for the whole generation
@@ -419,10 +488,9 @@ class Engine:
         b = tokens.shape[0]
         active = jnp.ones((b,), bool) if active is None \
             else jnp.asarray(active, bool)
-        key = ("chunk", int(n_steps))
-        if key not in self._decode_jit:
-            self._decode_jit[key] = self._chunk_fn(int(n_steps))
-        cache, toks, self._key = self._decode_jit[key](
+        fn = self._get_jit(self._decode_jit, ("chunk", int(n_steps)),
+                           lambda: self._chunk_fn(int(n_steps)))
+        cache, toks, self._key = fn(
             self.params, cache, tokens, self._key, active)
         return cache, toks
 
@@ -443,10 +511,9 @@ class Engine:
         cache, logits, lens = self.prefill(
             prompts, frames=frames, visual=visual,
             reserve_tokens=max_new_tokens - 1)
-        if max_new_tokens not in self._decode_jit:
-            self._decode_jit[max_new_tokens] = self._decode_fn(
-                max_new_tokens)
-        cache, toks, self._key = self._decode_jit[max_new_tokens](
+        fn = self._get_jit(self._decode_jit, max_new_tokens,
+                           lambda: self._decode_fn(max_new_tokens))
+        cache, toks, self._key = fn(
             self.params, cache, logits, self._key)
         return GenerationResult(tokens=np.asarray(toks),
                                 prompt_lens=np.asarray(lens),
@@ -463,16 +530,15 @@ class Engine:
         cache, logits, lens = self.prefill(
             prompts, frames=frames, visual=visual,
             reserve_tokens=max_new_tokens - 1)
-        if "step" not in self._decode_jit:
-            fam, cfg = self.fam, self.cfg
-            self._decode_jit["step"] = jax.jit(
-                lambda p, c, t: fam.decode_step(p, c, t, cfg))
+        fam, cfg = self.fam, self.cfg
+        step_fn = self._get_jit(
+            self._decode_jit, "step",
+            lambda: jax.jit(lambda p, c, t: fam.decode_step(p, c, t, cfg)))
         key = self._key
         tok, key = sample_token(logits, key, self.temperature)
         outs = [tok]
         for _ in range(max_new_tokens - 1):
-            step_logits, cache = self._decode_jit["step"](
-                self.params, cache, tok)
+            step_logits, cache = step_fn(self.params, cache, tok)
             tok, key = sample_token(step_logits, key, self.temperature)
             outs.append(tok)
         self._key = key

@@ -17,9 +17,10 @@ Mechanics
       retire finished slots  ->  admit queued prompts into free slots
       ->  ONE fixed-size decode chunk (a single compiled ``lax.scan``
       dispatch whose shapes never change, so the DECODE path never
-      recompiles; admission prefill is jit-specialized per prompt
-      length — pad/bucket prompt lengths client-side if cold-prefill
-      latency spikes matter)
+      recompiles; unchunked admission prefill is jit-specialized per
+      prompt length — ``chunked_prefill=True`` deletes that
+      specialization entirely by feeding prompts through the decode
+      lane in fixed-size chunks)
 
 * admission prefills the prompt alone (batch 1 — byte-identical to what
   an isolated ``Engine.generate`` would compute), samples the first
@@ -49,28 +50,66 @@ free blocks.  Peak cache memory is the blocks actually resident
 token streams are identical to the compaction scheduler's
 (``tests/test_paged.py``).
 
-Prefix caching (``prefix_cache=True``, paged only) deduplicates shared
-prompt prefixes across requests: every fully-written prompt block is
-content-addressed in a :class:`kvcache.PrefixIndex` (rolling hash of
-its token ids, chained so a hash identifies the whole prefix up to that
-block), and admission first walks the index — matched leading blocks
-are BORROWED (``BlockPool.share``) instead of recomputed, only the
-unmatched suffix runs through ``Engine.prefill_suffix`` (always >= 2
-tokens, keeping the matmuls on the same gemm path a full prefill
-lowers to).  Writes never land in a shared block: admission
-copy-on-writes the matched blocks the suffix overlaps, and a pre-chunk
-pass COWs window-lane ring slots about to recycle a shared block.  The
-index holds one pool reference per registered block so prefixes
-survive their owner's retirement; index-only blocks (refcount 1) are
-evicted LRU-first when admission needs physical capacity.  Worst-case
-reservation stays sound: a sharer's debt is ``worst - owned`` minus
-the dense-lane borrowed blocks append-only decode can never touch,
-and window rows pre-reserve one COW per registered/borrowed ring slot.
-Greedy token streams are identical to the non-sharing paged path
+Chunked prefill (``chunked_prefill=True``, paged only) deletes the
+whole-prompt prefill specialization path: admission only ALLOCATES a
+row (block table + ``lens = 0``), and the prompt then flows through the
+decode lane in fixed ``chunk_size``-token chunks — every scheduling
+round issues ONE ``Engine.mixed_step`` dispatch that runs a prefill
+chunk for every prefilling row (``T.prefill_chunk``, a no-op for rows
+with nothing to prefill) followed by the usual masked decode quantum
+for every decoding row.  The compiled shape depends only on
+``(n_slots, chunk_size)`` — never on any prompt length — so the engine
+compiles the serving loop ONCE and ``Engine.n_compiles`` stays flat no
+matter how ragged the admitted prompt lengths are (the
+recompile-per-prompt-length bug class, pinned in
+``tests/test_scheduler.py``).  A row that completes its prompt mid-
+round samples its first token from that chunk's last-valid-position
+logits and starts decoding the following round.  Greedy token streams
+are bitwise-identical to the unchunked scheduler's: ``prefill_chunk``
+pads the KV length to fixed ``attn_chunk_kv`` blocks so the online-
+softmax reduction groups identically for every split of the same
+prompt (see ``models/layers.py``).
+
+Policy layer: ``submit(..., deadline=...)`` attaches an absolute
+sim-step deadline; admission is earliest-deadline-first (deadline-less
+requests sort last, FIFO among equals — with no deadlines in the queue
+the order is plain FIFO, keeping the PR 6 traces schedule-identical).
+When the EDF head cannot be admitted for lack of blocks, the scheduler
+PREEMPTS the active row with the LATEST deadline — only if strictly
+later than the candidate's, so best-effort never preempts best-effort
+and livelock is impossible — by releasing its blocks (refcount-safe:
+owned blocks are freed, borrowed prefix blocks decref'd, the prefix
+index keeps registered blocks resident) and requeueing the request
+from scratch.  Greedy decode makes the restart token-identical to an
+uninterrupted run (``tests/test_scheduler.py``); under ``sanitize``
+the released blocks are poisoned and the leak gauge stays zero.
+
+Prefix caching (``prefix_cache=True``, implies chunked prefill)
+deduplicates shared prompt prefixes across requests: every
+fully-written prompt block is content-addressed in a
+:class:`kvcache.PrefixIndex` (rolling hash of its token ids, chained
+so a hash identifies the whole prefix up to that block), and admission
+first walks the index — matched leading blocks are BORROWED
+(``BlockPool.share``) instead of recomputed, and the chunk cursor
+starts AFTER them (``min(matched * block_size, plen - 1)``: matched
+blocks skip their chunks entirely; at least the last prompt token
+reruns because its logits seed the first sampled token).  Writes never
+land in a shared block: admission copy-on-writes the matched blocks
+the remaining chunks overlap, the per-round write tables sentinel
+every still-borrowed entry, and a pre-round pass COWs window-lane ring
+slots about to recycle a shared block.  The index holds one pool
+reference per registered block so prefixes survive their owner's
+retirement; index-only blocks (refcount 1) are evicted LRU-first when
+admission needs physical capacity.  Worst-case reservation stays
+sound: a sharer's debt is ``worst - owned`` minus the dense-lane
+borrowed blocks append-only writes can never touch, and window rows
+pre-reserve one COW per ring slot they may register (reserved at
+admission, settled when the fully-written prompt registers).  Greedy
+token streams are identical to the non-sharing paged path
 (``tests/test_prefix.py``) when the KV storage dtype is the compute
 dtype; with a posit KV codec the borrowed prefix is read back through
-the codec (exactly what decode reads), so suffix logits can differ in
-the last ulp from a from-scratch prefill's.
+the codec (exactly what decode reads), so logits past the prefix can
+differ in the last ulp from a from-scratch prefill's.
 
 Sampling: greedy decoding is deterministic and token-identical to
 isolated generation.  With ``temperature > 0`` the scheduler is still
@@ -105,6 +144,7 @@ class Request:
     max_new_tokens: int
     eos_id: Optional[int] = None
     arrival_step: int = 0          # simulation clock at submit()
+    deadline: Optional[int] = None  # absolute sim-step SLO (None = none)
 
 
 @dataclasses.dataclass
@@ -131,11 +171,17 @@ class _Slot:
     emitted: list
     admitted_step: int
     done: bool = False
+    # chunked-prefill cursor: prompt positions already cached, or None
+    # once the whole prompt is in (always None in unchunked mode)
+    cursor: Optional[int] = None
 
     @property
     def lens(self) -> int:
-        """Row's cache occupancy: prompt + generated-so-far minus the
-        not-yet-cached last token (mirrors the device ``lens`` entry)."""
+        """Row's cache occupancy: the chunk cursor while prefilling,
+        else prompt + generated-so-far minus the not-yet-cached last
+        token (mirrors the device ``lens`` entry)."""
+        if self.cursor is not None:
+            return self.cursor
         return len(self.req.prompt) + len(self.emitted) - 1
 
 
@@ -143,16 +189,21 @@ class Scheduler:
     """Iteration-level (continuous) batching over an :class:`Engine`.
 
     ``n_slots`` is the pool width (the compiled batch size), ``chunk_size``
-    the number of decode steps between scheduling decisions.  Larger
-    chunks amortize host work; smaller chunks admit/retire sooner.
-    ``prefix_cache=True`` (paged engines only) switches on
-    content-addressed prefix sharing with copy-on-write block tables —
-    see the module docstring for the full contract.
+    the number of decode steps between scheduling decisions — and, in
+    chunked mode, also the prefill chunk width.  Larger chunks amortize
+    host work; smaller chunks admit/retire sooner.
+    ``chunked_prefill=True`` (paged engines only) routes prompts through
+    the decode lane in fixed-size chunks so ONE compiled dispatch shape
+    serves every request; ``prefix_cache=True`` (implies chunked
+    prefill) switches on content-addressed prefix sharing with
+    copy-on-write block tables — see the module docstring for the full
+    contract.
     """
 
     def __init__(self, engine: Engine, *, n_slots: int,
                  chunk_size: int = 8, eos_id: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 chunked_prefill: bool = False):
         if engine.cfg.family != "transformer":
             raise ValueError(
                 "continuous batching needs per-row decode positions, "
@@ -169,6 +220,9 @@ class Scheduler:
         self.eos_id = eos_id
         self.paged = bool(getattr(engine, "paged", False))
         self.prefix_cache = bool(prefix_cache)
+        # prefix borrows are expressed as chunk-cursor skips, so sharing
+        # rides on the chunked machinery
+        self.chunked = bool(chunked_prefill) or self.prefix_cache
         # arena sanitizer: inherited from the engine so one flag arms
         # both halves (host-side BlockPool checks + device poisoning)
         self.sanitize = bool(getattr(engine, "sanitize", False))
@@ -176,6 +230,10 @@ class Scheduler:
             raise ValueError(
                 "prefix_cache=True needs Engine(paged=True): sharing "
                 "is expressed through block-table entries")
+        if self.chunked and not self.paged:
+            raise ValueError(
+                "chunked_prefill=True needs Engine(paged=True): chunks "
+                "write through per-row block tables")
         fam = get_family(engine.cfg)
         if self.paged:
             from repro.models import transformer as T
@@ -207,6 +265,9 @@ class Scheduler:
             # prefix-dedup win.
             self.peak_committed = 0
             self.peak_logical = 0
+            # window+prefix rows reserve their registration COW head at
+            # admission; settled when the fully-written prompt registers
+            self._head_reserved = [0] * self.n_slots
             if self.prefix_cache:
                 self.index = kvc.PrefixIndex()
             self._adopt_paged = jax.jit(
@@ -235,6 +296,7 @@ class Scheduler:
         self.n_chunks = 0
         self.n_admitted = 0
         self.n_retired = 0
+        self.n_preempted = 0           # rows evicted for an earlier deadline
         # cache-surgery ops, jitted once (shapes are fixed by the pool)
         self._reset = jax.jit(kvc.reset_slots)
         self._compact = jax.jit(lambda c, t: kvc.compact(c, t))
@@ -245,8 +307,15 @@ class Scheduler:
     # ------------------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int, *,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               deadline: Optional[int] = None) -> int:
         """Enqueue a request; returns its request id.
+
+        ``deadline``: absolute sim-step (``steps_run`` clock) the
+        request should finish by.  Deadlines drive EDF admission and
+        preemption (see the module docstring); ``None`` marks the
+        request best-effort — it sorts after every deadline and is the
+        first preemption victim.
 
         Raises up front if the request could never fit: a row may need
         ``prompt + max_new - 1`` cache slots plus a full chunk of
@@ -284,7 +353,9 @@ class Scheduler:
                                    max_new_tokens=max_new_tokens,
                                    eos_id=self.eos_id if eos_id is None
                                    else eos_id,
-                                   arrival_step=self.steps_run))
+                                   arrival_step=self.steps_run,
+                                   deadline=None if deadline is None
+                                   else int(deadline)))
         return rid
 
     @property
@@ -295,6 +366,26 @@ class Scheduler:
     @property
     def n_active(self) -> int:
         return sum(1 for s in self._slots if s is not None and not s.done)
+
+    @property
+    def stats(self) -> dict:
+        """Counters for one serving run — notably ``n_compiles``, the
+        engine's distinct-lowered-program count: flat after warmup in
+        chunked mode, growing with every new prompt length otherwise."""
+        d = dict(
+            n_admitted=self.n_admitted, n_retired=self.n_retired,
+            n_preempted=self.n_preempted, n_chunks=self.n_chunks,
+            steps_run=self.steps_run,
+            prefill_tokens=self.prefill_tokens,
+            prefix_hits=self.prefix_hits,
+            prefix_matched_tokens=self.prefix_matched_tokens,
+            n_cow=self.n_cow, n_evicted=self.n_evicted,
+            n_leaked=self.n_leaked,
+            n_compiles=self.engine.n_compiles)
+        if self.paged:
+            d.update(peak_committed=self.peak_committed,
+                     peak_logical=self.peak_logical)
+        return d
 
     # ------------------------------------------------------------------
     # scheduling round
@@ -370,24 +461,26 @@ class Scheduler:
         newly registered block gets one extra pool reference HELD BY THE
         INDEX, so the prefix outlives the row; window rows additionally
         grow their reservation by one block per registration, because
-        ring recycling will COW each shared slot at most once."""
+        ring recycling will COW each shared slot at most once (chunked
+        admission pre-reserved ``_head_reserved`` blocks for this —
+        settle against it)."""
         plen = len(prompt)
-        if not self._share_cap(plen):
-            return
+        reserved, self._head_reserved[row] = self._head_reserved[row], 0
         n_reg = 0
-        for i, h in enumerate(kvc.prefix_block_hashes(
-                prompt, self.block_size)):
-            if self.index.get(h) is not None:
-                continue               # first writer wins
-            bid = int(self._tables[row, i])
-            if bid == self.n_blocks:
-                continue
-            self.index.put(h, bid)
-            self.pool.share([bid])
-            n_reg += 1
-        if n_reg and self.engine.window_lane:
-            self._worst[row] += n_reg
-            self._outstanding += n_reg
+        if self._share_cap(plen):
+            for i, h in enumerate(kvc.prefix_block_hashes(
+                    prompt, self.block_size)):
+                if self.index.get(h) is not None:
+                    continue           # first writer wins
+                bid = int(self._tables[row, i])
+                if bid == self.n_blocks:
+                    continue
+                self.index.put(h, bid)
+                self.pool.share([bid])
+                n_reg += 1
+        if self.engine.window_lane and (n_reg or reserved):
+            self._worst[row] += n_reg - reserved
+            self._outstanding += n_reg - reserved
 
     def _row_debt(self, row: int) -> int:
         """Blocks still reserved (but not yet drawn) for a live row:
@@ -414,30 +507,14 @@ class Scheduler:
             self.pool.logical_in_use + self._outstanding)
 
     def _admit_paged(self, req: Request, row: int):
+        """Unchunked paged admission: whole-prompt linear prefill +
+        block adoption (prefix caching never reaches here — it implies
+        chunked mode)."""
         plen = len(req.prompt)
         worst = self._worst_blocks(plen, req.max_new_tokens)
-        matched, suffix_start = [], 0
-        if self.prefix_cache and self._share_cap(plen):
-            matched = self._match_prefix(req.prompt)
-            # always recompute >= 2 trailing tokens: the last is needed
-            # for logits anyway, and a length-2 suffix keeps every
-            # matmul on the same gemm path a full prefill lowers to
-            # (length-1 falls to a bitwise-divergent matvec)
-            suffix_start = min(len(matched) * self.block_size, plen - 2)
-        if matched and suffix_start > 0:
-            return self._admit_prefix(req, row, worst, matched,
-                                      suffix_start)
-
-        # reservation check: COW/extension draws must never find the
-        # pool empty.  Under prefix caching, index-only blocks count as
-        # available — _take_blocks evicts them on demand; window rows
-        # additionally pre-reserve one COW per block they may register.
-        head = plen // self.block_size if (
-            self.prefix_cache and self.engine.window_lane and
-            self._share_cap(plen)) else 0
-        avail = self.pool.n_free + (
-            self._evictable_count() if self.prefix_cache else 0)
-        if avail - self._outstanding < worst + head:
+        # reservation check: extension draws must never find the pool
+        # empty
+        if self.pool.n_free - self._outstanding < worst:
             return False               # wait for retirements' blocks
         # batch-1 LINEAR prefill: the same jitted path (and therefore
         # the same KV values) an isolated Engine.generate would run;
@@ -447,8 +524,7 @@ class Scheduler:
                                                    paged=False)
         now = self.table_width if self.engine.window_lane else \
             -(-plen // self.block_size)
-        ids = self._take_blocks(now) if self.prefix_cache \
-            else self.pool.alloc(now)
+        ids = self.pool.alloc(now)
         block_ids = np.full((self.table_width,), self.n_blocks, np.int32)
         block_ids[:now] = ids
         cap = min(self.engine.max_len, self._window) if self._window \
@@ -464,93 +540,119 @@ class Scheduler:
         self._worst[row] = worst
         self._outstanding += worst - now
         self.prefill_tokens += plen
-        if self.prefix_cache:
-            self._register_row(req.prompt, row)
         self._note_peaks()
         tok0, self.engine._key = sample_token(
             logits, self.engine._key, self.engine.temperature)
         return int(np.asarray(tok0)[0])
 
-    def _admit_prefix(self, req: Request, row: int, worst: int,
-                      matched: list, suffix_start: int):
-        """Admission with a prefix hit: point leading table entries at
-        the matched resident blocks, COW the matched blocks the suffix
-        recomputation will write into, and prefill ONLY
-        ``prompt[suffix_start:]`` against the gathered prefix KV."""
+    def _admit_chunked(self, req: Request, row: int):
+        """Chunked admission: ALLOCATE only — block table, ``lens``
+        cursor, prefix borrows.  No model dispatch happens here; the
+        prompt flows through ``mixed_step`` chunks in subsequent
+        rounds.  Returns the starting chunk cursor (0, or past the
+        borrowed prefix on a hit), or ``None`` if the pool cannot cover
+        the reservation yet."""
         plen = len(req.prompt)
         bs = self.block_size
-        avail = self.pool.n_free + self._evictable_count(exclude=matched)
-        head = plen // bs if self.engine.window_lane else 0
+        worst = self._worst_blocks(plen, req.max_new_tokens)
+        matched, suffix_start = [], 0
+        if self.prefix_cache and self._share_cap(plen):
+            matched = self._match_prefix(req.prompt)
+            # matched blocks skip their chunks entirely; at least the
+            # last prompt token reruns — its logits seed tok0
+            suffix_start = min(len(matched) * bs, plen - 1)
+        # reservation check: COW/extension draws must never find the
+        # pool empty.  Under prefix caching, index-only blocks count as
+        # available — _take_blocks evicts them on demand; window rows
+        # additionally pre-reserve one COW per block they may register
+        # (settled at registration time, when the prompt is written).
+        head = plen // bs if (
+            self.prefix_cache and self.engine.window_lane and
+            self._share_cap(plen)) else 0
+        avail = self.pool.n_free + (
+            self._evictable_count(exclude=matched)
+            if self.prefix_cache else 0)
         if avail - self._outstanding < worst + head:
-            return False
+            return None                # wait for retirements' blocks
         used = self.table_width if self.engine.window_lane else \
             -(-plen // bs)
-        cow_from = suffix_start // bs  # first slot the suffix writes
-        n_borrow = min(len(matched), cow_from)
-        # pin the whole match BEFORE any eviction can reclaim it
-        self.pool.share(matched)
-        cow_slots = list(range(cow_from, len(matched)))
-        fresh = self._take_blocks(used - len(matched) + len(cow_slots))
         block_ids = np.full((self.table_width,), self.n_blocks, np.int32)
-        block_ids[:len(matched)] = matched
-        for s, nid in zip(cow_slots, fresh[:len(cow_slots)]):
-            block_ids[s] = nid
-        block_ids[len(matched):used] = fresh[len(cow_slots):]
-        if cow_slots:
-            # duplicate the pattern leaves block-for-block, then drop
-            # our reference to the shared originals (the index keeps
-            # them resident for future matches)
-            self.cache = self.engine.copy_blocks(
-                self.cache, [matched[s] for s in cow_slots],
-                fresh[:len(cow_slots)])
-            self.pool.release([matched[s] for s in cow_slots])
-            self.n_cow += len(cow_slots)
+        borrowed = {}
+        if matched and suffix_start > 0:
+            cow_from = suffix_start // bs  # first slot chunks write
+            n_borrow = min(len(matched), cow_from)
+            # pin the whole match BEFORE any eviction can reclaim it
+            self.pool.share(matched)
+            cow_slots = list(range(cow_from, len(matched)))
+            fresh = self._take_blocks(
+                used - len(matched) + len(cow_slots))
+            block_ids[:len(matched)] = matched
+            for s, nid in zip(cow_slots, fresh[:len(cow_slots)]):
+                block_ids[s] = nid
+            block_ids[len(matched):used] = fresh[len(cow_slots):]
+            if cow_slots:
+                # duplicate the pattern leaves block-for-block, then
+                # drop our reference to the shared originals (the index
+                # keeps them resident for future matches)
+                self.cache = self.engine.copy_blocks(
+                    self.cache, [matched[s] for s in cow_slots],
+                    fresh[:len(cow_slots)])
+                self.pool.release([matched[s] for s in cow_slots])
+                self.n_cow += len(cow_slots)
+            borrowed = {s: int(matched[s]) for s in range(n_borrow)}
+            self.prefix_hits += 1
+            self.prefix_matched_tokens += suffix_start
+        else:
+            suffix_start = 0
+            fresh = self._take_blocks(used) if self.prefix_cache \
+                else self.pool.alloc(used)
+            block_ids[:used] = fresh
         self._tables[row] = block_ids
         self.cache = dict(
             self.cache,
             block_tables=jnp.asarray(self._tables),
             lens=jnp.asarray(self.cache["lens"],
-                             jnp.int32).at[row].set(plen))
-        # gather table covers [0, suffix_start): borrowed originals plus
-        # the COW copy of the boundary block (whose leading slots hold
-        # copied prefix content); the write table hides every
-        # still-borrowed entry behind the sentinel so a shared block can
-        # never take a write
-        wp = -(-suffix_start // bs)
-        write_table = block_ids.copy()
-        write_table[:n_borrow] = self.n_blocks
-        self.cache, logits = self.engine.prefill_suffix(
-            req.prompt, self.cache, block_ids[:wp], write_table,
-            suffix_start)
+                             jnp.int32).at[row].set(suffix_start))
         self._row_blocks[row] = list(fresh)
-        self._row_borrowed[row] = {s: int(matched[s])
-                                   for s in range(n_borrow)}
+        self._row_borrowed[row] = borrowed
         self._row_used[row] = used
         self._worst[row] = worst
+        self._head_reserved[row] = head
+        self._worst[row] += head       # reserve the registration COWs
         self._outstanding += self._row_debt(row)
-        self.prefix_hits += 1
-        self.prefix_matched_tokens += suffix_start
-        self.prefill_tokens += plen - suffix_start
-        self._register_row(req.prompt, row)
         self._note_peaks()
-        tok0, self.engine._key = sample_token(
-            logits, self.engine._key, self.engine.temperature)
-        return int(np.asarray(tok0)[0])
+        return suffix_start
+
+    def _write_span(self, slot):
+        """Inclusive logical block range ``[lo, hi]`` the next round's
+        writes may touch for this slot: the imminent prefill chunk while
+        the cursor is live, else the decode quantum.  ``None`` if the
+        round writes nothing for it."""
+        bs = self.block_size
+        if slot.cursor is not None:    # prefilling: this round's chunk
+            n = min(self.chunk_size, len(slot.req.prompt) - slot.cursor)
+            if n <= 0:
+                return None
+            return slot.cursor // bs, (slot.cursor + n - 1) // bs
+        lo = slot.lens
+        return lo // bs, (lo + self.chunk_size - 1) // bs
 
     def _cow_window_rows(self) -> bool:
         """Pre-chunk COW pass (window lane + prefix_cache only): the
-        ring recycles blocks in place, so the next chunk's writes may
+        ring recycles blocks in place, so the next round's writes may
         land in blocks that are shared (borrowed from a donor, or this
         row's own registered prefix).  Duplicate each such block and
         swap the table entry first; the admission-time reservation
         covers every copy."""
         src, dst = [], []
-        w, bs = self.table_width, self.block_size
+        w = self.table_width
         for i, slot in enumerate(self._slots):
             if slot is None or slot.done:
                 continue
-            lo = slot.lens // bs
-            hi = (slot.lens + self.chunk_size - 1) // bs
+            span = self._write_span(slot)
+            if span is None:
+                continue
+            lo, hi = span
             for q in range(lo, hi + 1):
                 s = q % w
                 bid = int(self._tables[i, s])
@@ -582,6 +684,8 @@ class Scheduler:
         for i, slot in enumerate(self._slots):
             if slot is None or slot.done or self.engine.window_lane:
                 continue
+            if slot.cursor is not None:
+                continue               # prompt blocks were allocated whole
             need = -(-min(slot.lens + self.chunk_size,
                           self.engine.max_len) // self.block_size)
             have = self._row_used[i]
@@ -603,21 +707,24 @@ class Scheduler:
         """Pre-chunk sanitizer gate (``sanitize=True`` only): every
         resident table entry of a live row must still be allocated
         (``check_read`` — stale entries are use-after-free gathers) and
-        every block the imminent decode chunk writes through must be
+        every block the imminent round writes through must be
         exclusively owned (``check_write`` — refcount > 1 here means a
         COW pass was skipped and the write would corrupt every other
-        owner's KV).  The write span mirrors ``_cow_window_rows``:
-        logical blocks ``lens // bs .. (lens + chunk - 1) // bs``,
-        mapped through the ring on the window lane."""
-        w, bs = self.table_width, self.block_size
+        owner's KV).  The write span mirrors ``_cow_window_rows``
+        (``_write_span``: the prefill chunk while the cursor is live,
+        the decode quantum after), mapped through the ring on the
+        window lane."""
+        w = self.table_width
         for i, slot in enumerate(self._slots):
             if slot is None or slot.done:
                 continue
             row = self._tables[i]
             self.pool.check_read(
                 int(b) for b in row if int(b) != self.n_blocks)
-            lo = slot.lens // bs
-            hi = (slot.lens + self.chunk_size - 1) // bs
+            span = self._write_span(slot)
+            if span is None:
+                continue
+            lo, hi = span
             if self.engine.window_lane:
                 slots_touched = {q % w for q in range(lo, hi + 1)}
             else:
@@ -626,15 +733,103 @@ class Scheduler:
                 int(row[s]) for s in slots_touched
                 if int(row[s]) != self.n_blocks)
 
+    # -- policy: EDF ordering + preemption ------------------------------
+
+    def _order_queue(self):
+        """Earliest-deadline-first admission order (stable, so FIFO
+        among equal deadlines and deadline-less requests).  With no
+        deadlines in the queue this is a no-op — the PR 6 traces stay
+        schedule-identical."""
+        if any(r.deadline is not None for r in self._queue):
+            self._queue = deque(sorted(
+                self._queue,
+                key=lambda r: float("inf") if r.deadline is None
+                else r.deadline))
+
+    def _preempt_row(self, i: int):
+        """Evict a live row to free its blocks: drop every reference
+        (owned blocks free, borrowed prefix blocks decref — the index
+        keeps registered blocks resident), sentinel the table, zero the
+        device ``lens``, and requeue the request from scratch.  Greedy
+        decode makes the restart token-identical to an uninterrupted
+        run; already-emitted tokens are discarded."""
+        slot = self._slots[i]
+        self._slots[i] = None
+        self.n_preempted += 1
+        self._outstanding -= self._row_debt(i)
+        reclaimed = self.pool.free(self._row_blocks[i])
+        if self._row_borrowed[i]:
+            reclaimed += self.pool.release(
+                list(self._row_borrowed[i].values()))
+        self._row_blocks[i] = []
+        self._row_borrowed[i] = {}
+        self._row_used[i] = 0
+        self._worst[i] = 0
+        self._head_reserved[i] = 0
+        self._tables[i] = self.n_blocks          # sentinel
+        mask = np.zeros((self.n_slots,), bool)
+        mask[i] = True
+        self.cache = self._release(self.cache, jnp.asarray(mask))
+        if self.sanitize:
+            if reclaimed:
+                self.cache = self.engine.poison_blocks(
+                    self.cache, reclaimed)
+            self.n_leaked = len(self.leak_report())
+        self._queue.append(slot.req)   # original arrival_step preserved
+
+    def _try_preempt(self, req: Request) -> bool:
+        """Preemption-by-block-release: when the EDF head cannot be
+        admitted, evict the active row with the LATEST deadline — only
+        if strictly later than the candidate's (best-effort rows count
+        as latest), so best-effort never preempts best-effort and the
+        loop cannot livelock."""
+        if not self.paged:
+            return False
+        cd = float("inf") if req.deadline is None else req.deadline
+        victim, vd_max = None, cd
+        for i, s in enumerate(self._slots):
+            if s is None or s.done:
+                continue
+            vd = float("inf") if s.req.deadline is None \
+                else s.req.deadline
+            if vd > vd_max:
+                victim, vd_max = i, vd
+        if victim is None:
+            return False
+        self._preempt_row(victim)
+        return True
+
     def _admit(self):
+        self._order_queue()
         free = [i for i, s in enumerate(self._slots) if s is None]
         while self._queue and free:
             req = self._queue[0]
             row = free[0]
+            if self.chunked:
+                cursor = self._admit_chunked(req, row)
+                if cursor is None:     # pool cannot cover the request yet
+                    if self._try_preempt(req):
+                        self._order_queue()
+                        free = [i for i, s in enumerate(self._slots)
+                                if s is None]
+                        continue
+                    break              # EDF: do not admit around the head
+                self._queue.popleft()
+                free.remove(row)
+                self._slots[row] = _Slot(
+                    req=req, emitted=[],
+                    admitted_step=self.steps_run, cursor=cursor)
+                self.n_admitted += 1
+                continue
             if self.paged:
                 tok0 = self._admit_paged(req, row)
                 if tok0 is False:      # pool cannot cover the request yet
-                    break              # FIFO: do not admit around it
+                    if self._try_preempt(req):
+                        self._order_queue()
+                        free = [i for i, s in enumerate(self._slots)
+                                if s is None]
+                        continue
+                    break              # EDF: do not admit around the head
             else:
                 plen = len(req.prompt)
                 # batch-1 prefill: the same jitted path (and therefore
@@ -649,7 +844,7 @@ class Scheduler:
                 self.cache = self._adopt(self.cache, row_cache,
                                          jnp.int32(row))
             self._queue.popleft()
-            free.pop(0)
+            free.remove(row)
             slot = _Slot(req=req, emitted=[tok0],
                          admitted_step=self.steps_run)
             # a request can finish on its very first (prefill) token
@@ -707,6 +902,7 @@ class Scheduler:
                 self._row_borrowed[i] = {}
                 self._row_used[i] = 0
                 self._worst[i] = 0
+                self._head_reserved[i] = 0
                 self._tables[i] = self.n_blocks          # sentinel
         if done_mask.any():
             if self.paged:
@@ -727,21 +923,102 @@ class Scheduler:
                                          jnp.asarray(done_mask))
         return completions
 
+    def _step_chunked(self):
+        """One chunked scheduling round: admit (allocation only) ->
+        extend/COW/sanitize for the combined prefill+decode write spans
+        -> ONE ``mixed_step`` dispatch (a prefill chunk for every
+        prefilling row, the decode quantum for every decoding row —
+        compiled once, for every prompt length) -> advance cursors,
+        sample first tokens for rows that completed their prompt, emit
+        decode tokens -> retire."""
+        self._admit()
+        decode_active = np.array(
+            [s is not None and not s.done and s.cursor is None
+             for s in self._slots], bool)
+        nv = np.zeros((self.n_slots,), np.int32)
+        chunk = np.full((self.n_slots, self.chunk_size),
+                        self.engine.pad_id, np.int32)
+        for i, s in enumerate(self._slots):
+            if s is None or s.done or s.cursor is None:
+                continue
+            n = min(self.chunk_size, len(s.req.prompt) - s.cursor)
+            nv[i] = n
+            chunk[i, :n] = s.req.prompt[s.cursor:s.cursor + n]
+        if not decode_active.any() and not nv.any():
+            # admissions can complete instantly only via retirement of
+            # already-done slots; surface those without a dispatch
+            return self._retire()
+        self._ensure_blocks()
+        if self.sanitize:
+            self._sanitize_check_chunk()
+        # per-round write tables: every still-borrowed entry hidden
+        # behind the sentinel so shared blocks never take a write (not
+        # even a byte-identical write-back from pack_range)
+        wt = self._tables.copy()
+        for i, borrowed in enumerate(self._row_borrowed):
+            for s in borrowed:
+                wt[i, s] = self.n_blocks
+        self.cache, chunk_logits, toks = self.engine.mixed_step(
+            self.cache, chunk, nv, self._cur_tok, self.chunk_size,
+            decode_active=decode_active, write_tables=wt)
+        toks = np.asarray(toks)
+        chunk_logits = np.asarray(chunk_logits)
+        self.steps_run += self.chunk_size
+        self.n_chunks += 1
+
+        for i, s in enumerate(self._slots):
+            if s is None or s.done:
+                continue
+            req = s.req
+            if decode_active[i]:
+                for t in toks[i]:
+                    s.emitted.append(int(t))
+                    if int(t) == req.eos_id or \
+                            len(s.emitted) >= req.max_new_tokens:
+                        s.done = True
+                        break
+                self._cur_tok[i] = toks[i, -1]
+            elif nv[i]:
+                s.cursor += int(nv[i])
+                self.prefill_tokens += int(nv[i])
+                if s.cursor >= len(req.prompt):
+                    # prompt complete: first token comes from the
+                    # chunk's last-valid-position logits, exactly where
+                    # a whole-prompt prefill would have sampled it
+                    s.cursor = None
+                    if self.prefix_cache:
+                        self._register_row(req.prompt, i)
+                        self._note_peaks()
+                    tok0, self.engine._key = sample_token(
+                        jnp.asarray(chunk_logits[i:i + 1]),
+                        self.engine._key, self.engine.temperature)
+                    tok0 = int(np.asarray(tok0)[0])
+                    s.emitted.append(tok0)
+                    self._cur_tok[i] = tok0
+                    if tok0 == req.eos_id or req.max_new_tokens == 1:
+                        s.done = True
+        return self._retire()
+
     def step(self):
         """One scheduling round; returns the requests completed in it.
 
-        Order: admit queued prompts into free slots (FIFO; a paged
-        admission defers until ``n_free + evictable - outstanding``
-        covers its worst-case block demand) -> extend live dense rows'
-        tables / COW window-lane ring slots about to recycle a shared
-        block -> ONE fixed-size decode chunk (single compiled dispatch,
-        shapes never change) -> retire finished rows (decref their
-        blocks; prefix-registered blocks stay resident under the
+        Order: admit queued prompts into free slots (EDF over any
+        deadlines, FIFO otherwise; a paged admission defers until
+        ``n_free + evictable - outstanding`` covers its worst-case
+        block demand, preempting a strictly-later-deadline row if that
+        unblocks the head) -> extend live dense rows' tables / COW
+        window-lane ring slots about to recycle a shared block -> ONE
+        fixed-size decode chunk (single compiled dispatch, shapes never
+        change; in chunked mode the dispatch also carries every
+        prefilling row's prompt chunk) -> retire finished rows (decref
+        their blocks; prefix-registered blocks stay resident under the
         index's reference).  Invariants pinned by tests: greedy token
         streams identical to isolated generation and to the
         non-sharing paged path; writes reach a block only while its
         refcount is 1; reservation never lets extension or COW find
         the pool empty."""
+        if self.chunked:
+            return self._step_chunked()
         self._admit()
         active = np.array(
             [s is not None and not s.done for s in self._slots], bool)

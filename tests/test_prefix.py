@@ -9,12 +9,13 @@ Three layers of pinning:
 * ``PrefixIndex`` + rolling-hash contract — chained hashes identify
   whole prefixes, first-writer-wins registration, LRU eviction order.
 * End-to-end token identity — on dense, MLA and sliding-window lanes,
-  a scheduler with ``prefix_cache=True`` must emit EXACTLY the token
-  streams the non-sharing paged scheduler emits (f32 KV storage: the
-  suffix prefill is bitwise-identical to a full prefill) while holding
-  strictly fewer peak physical blocks and prefilling strictly fewer
-  tokens on a shared-prefix trace.  COW divergence after the shared
-  prefix must never leak one request's tokens into another's blocks.
+  a scheduler with ``prefix_cache=True`` (which rides the chunked-
+  prefill lane: matched blocks skip their chunks) must emit EXACTLY
+  the token streams the non-sharing paged scheduler emits (f32 KV
+  storage: chunked prefill is bitwise-identical to a full prefill)
+  while prefilling strictly fewer tokens on a shared-prefix trace.
+  COW divergence after the shared prefix must never leak one request's
+  tokens into another's blocks.
 """
 import random
 
@@ -132,17 +133,24 @@ def test_prefix_index_lru_and_first_writer_wins():
 # ---------------------------------------------------------------------------
 
 def _run_trace(cfg, params, prompts, *, prefix_cache, max_new, bs, nb,
-               max_len, n_slots=2, chunk=4, sanitize=True):
+               max_len, n_slots=2, chunk=4, sanitize=True, warm=0):
     # sanitize=True by default: every prefix/paged trace in this suite
     # runs under the arena sanitizer (pre-chunk check_read/check_write
     # gates, poisoned reclaims, leak accounting at retirement) — it must
-    # never change a token and must end leak-free
+    # never change a token and must end leak-free.  ``warm``: requests
+    # run to completion BEFORE the rest are submitted — prefix blocks
+    # register when a prompt finishes its chunks, so a warm donor makes
+    # every later admission matchable (concurrently-prefilling rows
+    # cannot share with each other).
     eng = Engine(cfg, params, max_len=max_len, paged=True,
                  block_size=bs, n_blocks=nb, sanitize=sanitize)
     sched = Scheduler(eng, n_slots=n_slots, chunk_size=chunk,
                       prefix_cache=prefix_cache)
-    rids = [sched.submit(p, max_new) for p in prompts]
-    done = sched.run(max_rounds=500)
+    done = {}
+    rids = [sched.submit(p, max_new) for p in prompts[:warm]]
+    done.update(sched.run(max_rounds=500))
+    rids += [sched.submit(p, max_new) for p in prompts[warm:]]
+    done.update(sched.run(max_rounds=500))
     toks = {r: done[r].tokens.tolist() for r in rids}
     if sanitize:
         assert sched.n_leaked == 0 and not sched.leak_report()
@@ -171,8 +179,10 @@ def test_prefix_sharing_token_identical(lane):
     cfg = _cfg(lane)
     params = _params(cfg)
     prompts, kw = _lane_trace(lane, np.random.default_rng(3))
-    base, sb = _run_trace(cfg, params, prompts, prefix_cache=False, **kw)
-    shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True, **kw)
+    base, sb = _run_trace(cfg, params, prompts, prefix_cache=False,
+                          warm=1, **kw)
+    shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True,
+                            warm=1, **kw)
     assert shared == base
     assert ss.prefix_hits >= len(prompts) - 1
     assert ss.prefill_tokens < sb.prefill_tokens
@@ -185,16 +195,19 @@ def test_prefix_sharing_token_identical(lane):
 
 @pytest.mark.slow
 def test_exact_duplicate_prompts_trigger_admission_cow():
-    """A block-aligned full-prompt match still recomputes >= 2 tokens;
-    their KV writes land in a COW copy, never the shared block."""
+    """A block-aligned full-prompt match still recomputes its last
+    token (its logits seed tok0); that KV write lands in a COW copy of
+    the boundary block, never the shared block itself."""
     cfg = _cfg("dense")
     params = _params(cfg)
     rng = np.random.default_rng(5)
     p0 = [int(t) for t in rng.integers(0, 200, 24)]       # 24 % 4 == 0
     prompts = [p0, list(p0), list(p0)]
     kw = dict(max_new=8, bs=4, nb=64, max_len=64)
-    base, _ = _run_trace(cfg, params, prompts, prefix_cache=False, **kw)
-    shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True, **kw)
+    base, _ = _run_trace(cfg, params, prompts, prefix_cache=False,
+                         warm=1, **kw)
+    shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True,
+                            warm=1, **kw)
     assert shared == base
     assert ss.n_cow >= 2                # one COW per duplicate admission
 
@@ -228,8 +241,10 @@ def test_window_ring_recycling_cows_shared_blocks():
     cfg = _cfg("window")
     params = _params(cfg)
     prompts, kw = _lane_trace("window", np.random.default_rng(3))
-    base, _ = _run_trace(cfg, params, prompts, prefix_cache=False, **kw)
-    shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True, **kw)
+    base, _ = _run_trace(cfg, params, prompts, prefix_cache=False,
+                         warm=1, **kw)
+    shared, ss = _run_trace(cfg, params, prompts, prefix_cache=True,
+                            warm=1, **kw)
     assert shared == base
     assert ss.n_cow > 0
 
@@ -247,7 +262,7 @@ def test_sanitizer_catches_skipped_window_cow(monkeypatch):
     monkeypatch.setattr(Scheduler, "_cow_window_rows",
                         lambda self: False)
     with pytest.raises(kvc.BlockSanitizerError, match="COW violation"):
-        _run_trace(cfg, params, prompts, prefix_cache=True, **kw)
+        _run_trace(cfg, params, prompts, prefix_cache=True, warm=1, **kw)
 
 
 def test_prefix_cache_requires_paged_engine():

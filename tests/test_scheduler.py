@@ -7,6 +7,13 @@ emit alone through ``Engine.generate``.  Pinned on all three transformer
 attention lanes (dense, MLA, sliding-window ring buffer), plus the cache
 surgery ops (``reset_slots`` / ``compact`` / ``adopt_row``) and the
 one-dispatch-per-chunk property that keeps admissions recompile-free.
+
+PR 8 adds the chunked-prefill lane and the policy layer: prompts fed
+through the decode lane in fixed-size chunks must stay byte-identical
+with a FLAT engine compile count across arbitrarily ragged prompt
+lengths, EDF admission must honor deadlines, and preemption-by-block-
+release must restart a request token-identically without leaking a
+single block under the sanitizer.
 """
 import dataclasses
 
@@ -143,6 +150,132 @@ def test_each_chunk_is_one_compiled_dispatch():
     assert ("chunk", 4) in eng._decode_jit and \
         eng._decode_jit[("chunk", 4)] is counted, \
         "scheduler must reuse the cached chunk callable across admissions"
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: one compiled shape serves every request
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lane", ["dense", "mla", "window"])
+def test_chunked_prefill_token_identity(lane):
+    """Prompts fed through the decode lane in fixed-size chunks emit
+    exactly the streams whole-prompt prefill emits, per lane, with the
+    sanitizer armed and zero leaks."""
+    cfg = _cfg(lane)
+    params = _params(cfg)
+    rng = np.random.default_rng(12)
+    plens = [5, 9, 3, 7, 4, 6]
+    gens = [4, 8, 4, 8, 4, 8]
+    prompts = [rng.integers(1, cfg.vocab, n).tolist() for n in plens]
+    ref_eng = Engine(cfg, params, max_len=32, paged=True, block_size=4)
+    refs = [ref_eng.generate([p], g).tokens[0]
+            for p, g in zip(prompts, gens)]
+
+    eng = Engine(cfg, params, max_len=32, paged=True, block_size=4,
+                 n_blocks=64, sanitize=True)
+    sched = Scheduler(eng, n_slots=2, chunk_size=4, chunked_prefill=True)
+    rids = [sched.submit(p, g) for p, g in zip(prompts, gens)]
+    done = sched.run(max_rounds=200)
+    for rid, ref in zip(rids, refs):
+        np.testing.assert_array_equal(done[rid].tokens, ref)
+    assert sched.n_leaked == 0 and not sched.leak_report()
+
+
+def test_compile_count_flat_across_ragged_admissions():
+    """Eight distinct prompt lengths through the chunked scheduler add
+    ZERO lowered programs after warmup — the mixed dispatch shape
+    depends only on (n_slots, chunk_size), never on a prompt length.
+    (The unchunked admission path compiles one prefill per length;
+    that specialization family no longer exists in chunked mode.)"""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(13)
+    eng = Engine(cfg, params, max_len=48, paged=True, block_size=4,
+                 n_blocks=96)
+    sched = Scheduler(eng, n_slots=2, chunk_size=4, chunked_prefill=True)
+    for n in (3, 11):
+        sched.submit(rng.integers(1, cfg.vocab, n).tolist(), 4)
+    sched.run(max_rounds=200)
+    warm_compiles = eng.n_compiles
+    assert warm_compiles >= 1
+    for n in (2, 5, 7, 9, 13, 17, 21, 26):      # 8 fresh distinct lengths
+        sched.submit(rng.integers(1, cfg.vocab, n).tolist(), 6)
+    sched.run(max_rounds=400)
+    assert eng.n_compiles == warm_compiles
+    assert sched.stats["n_compiles"] == warm_compiles
+
+
+# ---------------------------------------------------------------------------
+# policy layer: deadlines, EDF admission, preemption
+# ---------------------------------------------------------------------------
+
+def test_edf_admission_order():
+    """A 1-slot pool admits by earliest deadline, not arrival order;
+    best-effort (deadline-less) requests go last."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(14)
+    prompts = [rng.integers(1, cfg.vocab, 5).tolist() for _ in range(3)]
+    eng = Engine(cfg, params, max_len=32, paged=True, block_size=4,
+                 n_blocks=32)
+    sched = Scheduler(eng, n_slots=1, chunk_size=4, chunked_prefill=True)
+    r_be = sched.submit(prompts[0], 4)               # best-effort, first in
+    r_late = sched.submit(prompts[1], 4, deadline=100)
+    r_soon = sched.submit(prompts[2], 4, deadline=50)
+    done = sched.run(max_rounds=200)
+    assert done[r_soon].admitted_step < done[r_late].admitted_step \
+        < done[r_be].admitted_step
+
+
+def test_preemption_restores_token_identity_and_leaks_nothing():
+    """Overload: a deadline request that cannot fit preempts the
+    best-effort row (block release is refcount-safe, sanitizer armed
+    and poisoning the reclaims); the preempted request restarts from
+    scratch and still emits its isolated greedy stream, and no block
+    leaks."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(15)
+    p_a = rng.integers(1, cfg.vocab, 8).tolist()
+    p_b = rng.integers(1, cfg.vocab, 8).tolist()
+    ref_eng = Engine(cfg, params, max_len=32, paged=True, block_size=4)
+    ref_a = ref_eng.generate([p_a], 8).tokens[0]
+    ref_b = ref_eng.generate([p_b], 8).tokens[0]
+
+    # 6-block pool: one request's worst case is 5 blocks, so two can
+    # never be resident together — the deadline MUST preempt
+    eng = Engine(cfg, params, max_len=32, paged=True, block_size=4,
+                 n_blocks=6, sanitize=True)
+    sched = Scheduler(eng, n_slots=2, chunk_size=4, chunked_prefill=True)
+    ra = sched.submit(p_a, 8)                    # best-effort
+    sched.step()                                 # admitted, prefilling
+    rb = sched.submit(p_b, 8, deadline=20)       # urgent, pool is full
+    done = sched.run(max_rounds=300)
+    assert sched.n_preempted >= 1
+    assert done[rb].admitted_step < done[ra].admitted_step  # b cut in
+    np.testing.assert_array_equal(done[ra].tokens, ref_a)
+    np.testing.assert_array_equal(done[rb].tokens, ref_b)
+    assert sched.n_leaked == 0 and not sched.leak_report()
+
+
+def test_best_effort_never_preempts_best_effort():
+    """Without deadlines the same overload just queues: no preemption
+    (so no livelock risk), strict FIFO, streams untouched."""
+    cfg = _cfg("dense")
+    params = _params(cfg)
+    rng = np.random.default_rng(16)
+    p_a = rng.integers(1, cfg.vocab, 8).tolist()
+    p_b = rng.integers(1, cfg.vocab, 8).tolist()
+    eng = Engine(cfg, params, max_len=32, paged=True, block_size=4,
+                 n_blocks=6, sanitize=True)
+    sched = Scheduler(eng, n_slots=2, chunk_size=4, chunked_prefill=True)
+    ra = sched.submit(p_a, 8)
+    sched.step()
+    rb = sched.submit(p_b, 8)                    # also best-effort
+    done = sched.run(max_rounds=300)
+    assert sched.n_preempted == 0
+    assert done[rb].admitted_step >= done[ra].finished_step
+    assert sched.n_leaked == 0 and not sched.leak_report()
 
 
 # ---------------------------------------------------------------------------

@@ -315,6 +315,82 @@ def test_pvu005_waiver(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# PVU006 — jit specialization on prompt-length-like static args
+# ---------------------------------------------------------------------------
+
+# the PR 8 deletion in miniature: the old engine kept one compiled
+# prefill per prompt length by making plen a static arg
+BAD_PLEN_JIT = """
+    import jax
+    import functools
+
+    def prefill(params, toks, plen):
+        return toks[:plen]
+
+    fast = jax.jit(prefill, static_argnames=("plen",))
+    also = functools.partial(jax.jit, static_argnames=["prompt_len"])
+"""
+
+
+def test_pvu006_fires_on_plen_static_args(tmp_path):
+    active, _ = _run(tmp_path, BAD_PLEN_JIT)
+    assert _ids(active) == ["PVU006", "PVU006"]
+    assert "per prompt length" in active[0].message
+    assert "mixed_step" in active[0].hint
+
+
+def test_pvu006_fires_on_static_argnums_resolved_to_plen(tmp_path):
+    active, _ = _run(tmp_path, """
+        import jax
+
+        def prefill(params, toks, seq_len):
+            return toks[:seq_len]
+
+        fast = jax.jit(prefill, static_argnums=(2,))
+    """)
+    assert _ids(active) == ["PVU006"]
+    assert "seq_len" in active[0].message
+
+
+def test_pvu006_silent_on_capacity_and_config_statics(tmp_path):
+    # the repo's real static args: config objects, block geometry,
+    # window/ring flags, capacity bounds — none are per-request lengths
+    active, _ = _run(tmp_path, """
+        import jax
+        import functools
+
+        @functools.partial(jax.jit, static_argnames=("cfg", "block", "interpret"))
+        def kernel(x, cfg, block, interpret):
+            return x
+
+        def pack(arena, tables, window, src_ring):
+            return arena
+
+        fast = jax.jit(pack, static_argnames=("window", "src_ring"))
+        cap = jax.jit(lambda x, max_len: x, static_argnames=("max_len",))
+    """)
+    assert active == []
+
+
+def test_pvu006_silent_inside_engine(tmp_path):
+    active, _ = _run(tmp_path, BAD_PLEN_JIT,
+                     filename="runtime/engine.py")
+    assert active == []
+
+
+def test_pvu006_waiver(tmp_path):
+    active, waived = _run(tmp_path, """
+        import jax
+
+        def f(x, plen):
+            return x[:plen]
+
+        g = jax.jit(f, static_argnames=("plen",))  # positcheck: disable=PVU006
+    """)
+    assert active == [] and _ids(waived) == ["PVU006"]
+
+
+# ---------------------------------------------------------------------------
 # framework behaviour
 # ---------------------------------------------------------------------------
 
@@ -341,7 +417,8 @@ def test_waiver_on_other_line_does_not_suppress(tmp_path):
 
 def test_rule_registry_is_complete():
     ids = [r.id for r in ALL_RULES]
-    assert ids == ["PVU001", "PVU002", "PVU003", "PVU004", "PVU005"]
+    assert ids == ["PVU001", "PVU002", "PVU003", "PVU004", "PVU005",
+                   "PVU006"]
     for rid in ids:
         r = rule_by_id(rid)
         assert r.severity in ("error", "warning")
@@ -388,5 +465,6 @@ def test_cli_list_rules():
         [sys.executable, "-m", "repro.analysis", "--list-rules"],
         cwd=REPO, env=_analysis_env(), capture_output=True, text=True)
     assert proc.returncode == 0
-    for rid in ("PVU001", "PVU002", "PVU003", "PVU004", "PVU005"):
+    for rid in ("PVU001", "PVU002", "PVU003", "PVU004", "PVU005",
+                "PVU006"):
         assert rid in proc.stdout
