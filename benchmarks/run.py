@@ -60,13 +60,23 @@ def _write_json(suite: str, rows) -> str:
     return path
 
 
-def _print_deltas(suite: str, rows) -> None:
+def _print_deltas(suite: str, rows, baselines_dir: str = None) -> None:
     """Compare fresh rows against ``benchmarks/baselines/BENCH_<suite>.json``
     (committed baseline) and print a ``# delta vs baseline`` line per
-    matching row name.  Silent when no baseline is committed."""
-    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                        "baselines", f"BENCH_{suite}.json")
+    matching row name.  A suite with no committed baseline says so
+    explicitly (it used to skip silently, which read as "no change"
+    when it meant "nothing to compare against"); corrupt baselines
+    warn and skip."""
+    if baselines_dir is None:
+        baselines_dir = os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "baselines")
+    path = os.path.join(baselines_dir, f"BENCH_{suite}.json")
     if not os.path.exists(path):
+        print(f"# {suite}: no committed baseline "
+              f"(benchmarks/baselines/BENCH_{suite}.json missing; run "
+              f"'python -m benchmarks.run {suite} --json' and copy "
+              f"benchmarks/BENCH_{suite}.json there to start tracking "
+              "deltas)", file=sys.stderr, flush=True)
         return
     try:
         with open(path) as f:

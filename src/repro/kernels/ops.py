@@ -16,6 +16,13 @@ import jax.numpy as jnp
 
 from repro.core.types import PositConfig
 from . import posit_codec, posit_dot, posit_ew, posit_gemm, posit_qgemm
+# the fused paged-decode attention entries are cache-layout specific
+# (block arenas + tables), not tile-shape polymorphic like the wrappers
+# below — no padding shim to add, so they re-export as-is to keep one
+# public kernel surface
+from .posit_paged_attn import (paged_decode_attention,        # noqa: F401
+                               paged_decode_attention_mla,    # noqa: F401
+                               paged_decode_kv_bytes)         # noqa: F401
 
 
 def _as_2d(x):

@@ -143,10 +143,12 @@ def drive_trace(sched: Scheduler, trace, deadline_steps=None):
 
 
 def _build_engine(args, cfg, params, max_len):
+    kernel = getattr(args, "decode_kernel", "gather")
     return Engine(cfg, params, max_len=max_len,
                   temperature=args.temperature, seed=args.seed,
                   paged=args.paged, block_size=args.block_size,
-                  n_blocks=args.n_blocks)
+                  n_blocks=args.n_blocks,
+                  decode_kernel=None if kernel == "gather" else kernel)
 
 
 def run_continuous(args, cfg, params):
@@ -259,6 +261,15 @@ def main(argv=None):
     ap.add_argument("--n-blocks", type=int, default=0,
                     help="arena size in blocks (with --paged; "
                          "0 = worst case, never out of blocks)")
+    ap.add_argument("--decode-kernel", choices=["gather", "fused"],
+                    default="gather",
+                    help="paged decode attention path (with --paged): "
+                         "'gather' materializes per-row KV via "
+                         "paged_gather then attends in jnp; 'fused' "
+                         "walks the block table inside one Pallas "
+                         "kernel (posit decode + online softmax "
+                         "in-kernel), token-identical with ~3-7x fewer "
+                         "decode KV bytes")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="content-addressed prefix sharing with "
                          "copy-on-write block tables (with --continuous "
@@ -291,6 +302,8 @@ def main(argv=None):
         ap.error("--chunked-prefill requires --continuous --paged")
     if args.deadline_ms > 0 and not args.continuous:
         ap.error("--deadline-ms requires --continuous")
+    if args.decode_kernel == "fused" and not args.paged:
+        ap.error("--decode-kernel fused requires --paged")
 
     cfg = configs.get_config(args.arch)
     if args.reduced:

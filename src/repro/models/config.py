@@ -62,6 +62,10 @@ class ModelConfig:
     # --- posit integration (the paper's technique) ---
     weight_posit: Optional[str] = None    # None | 'posit16' | 'posit8'
     kv_posit: Optional[str] = None
+    paged_attn_kernel: str = "gather"     # paged decode: 'gather' (jnp
+                                          # reference) | 'fused' (Pallas
+                                          # block-table walk, posit
+                                          # decode in-kernel)
     grad_compress: Optional[str] = None   # cross-pod gradient posit
     posit_exact_linear: bool = False      # dense() via quire-exact pgemm
                                           # (numerics audits; slow)

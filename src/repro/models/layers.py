@@ -372,7 +372,13 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, cfg: ModelConfig,
         valid &= apos >= (cl[:, None] - window)
     scores = jnp.where(valid[:, None, None, :], scores, _NEG)
     m = scores.max(-1, keepdims=True)
-    p = jnp.exp(scores - m)
+    # All-masked guard: a row with NO valid slot (an inactive scheduler
+    # slot whose sentinel table entries alias real blocks through the
+    # gather clamp) has m == _NEG, so exp(scores - m) == 1 EVERYWHERE —
+    # a uniform average of garbage.  Zeroing invalid slots makes such a
+    # row finalize to exact zeros (l == 0); rows with a valid slot are
+    # bit-identical (finite m already underflowed their masked exp to 0).
+    p = jnp.where(valid[:, None, None, :], jnp.exp(scores - m), 0.0)
     l = p.sum(-1)
     out = jnp.einsum("bgrt,btgv->bgrv", p.astype(cdtype(cfg)), vs,
                      preferred_element_type=jnp.float32)
@@ -534,6 +540,105 @@ def paged_gather(arena, tables):
     b, w = tables.shape
     g = jnp.take(arena, jnp.clip(tables, 0, nb - 1), axis=0)
     return g.reshape((b, w * bs) + arena.shape[2:])
+
+
+def paged_apos(tables, lens, block_size: int, n_blocks: int, *,
+               window: int = 0):
+    """Per-slot absolute positions of the virtual paged cache, with dead
+    slots marked ``-1``: the one masking contract BOTH paged decode
+    paths (fused kernel and gather fallback) consume, so they cannot
+    skew.  A slot is dead when its table entry is the sentinel — the
+    gather's clamp would alias an arbitrary real block there, and the
+    fused kernel's DMA clamps the same way, so both paths must exclude
+    it by position.  Live slots keep ``paged_positions``'s row-local
+    layout (window lane included)."""
+    b, w = tables.shape
+    apos = paged_positions(lens, w, block_size, window=window)
+    live = jnp.repeat(tables < n_blocks, block_size, axis=1)  # (B, W*bs)
+    return jnp.where(live, apos, -1)
+
+
+def decode_attention_paged(q, k_arena, v_arena, tables, lens, *,
+                           cfg: ModelConfig, kv_posit: Optional[str] = None,
+                           window: int = 0, kernel: str = "gather",
+                           interpret: bool = True):
+    """Paged decode attention straight off the block tables.
+
+    q: (B, 1, H, D); arenas (n_blocks, bs, G, D[v]) posit patterns or
+    floats; tables (B, W) int32; lens (B,) int32 row frontiers (the
+    step's token is already written at ``lens[b]``).
+
+    ``kernel="fused"`` walks the tables inside one Pallas kernel
+    (``kernels/posit_paged_attn.py``): posit decode on the VPU, online
+    softmax carried in VMEM scratch, sentinel/window masks resolved
+    in-kernel — KV patterns cross HBM once.  ``kernel="gather"`` is the
+    jnp reference: ``paged_gather`` + :func:`decode_attention`.  Both
+    paths consume :func:`paged_apos`, so sentinel-backed slots are
+    masked identically and a fully-sentinel row (preempted slot)
+    returns exact zeros on either path.
+    """
+    b, _, h, d = q.shape
+    nb, bs, g = k_arena.shape[0], k_arena.shape[1], k_arena.shape[2]
+    apos = paged_apos(tables, lens, bs, nb, window=window)
+    if kernel == "fused":
+        from repro.kernels import posit_paged_attn as K  # lazy: pallas
+        qg = (q.reshape(b, g, h // g, d) * d ** -0.5).astype(jnp.float32)
+        out = K.paged_decode_attention(
+            qg, k_arena, v_arena, tables, apos, lens,
+            pcfg=pcfg(kv_posit) if kv_posit else None,
+            window=window, interpret=interpret)
+        return out.reshape(b, 1, h, -1).astype(q.dtype)
+    if kernel != "gather":
+        raise ValueError(f"unknown paged decode kernel {kernel!r}")
+    return decode_attention(
+        q, paged_gather(k_arena, tables), paged_gather(v_arena, tables),
+        lens + 1, cfg=cfg, kv_posit=kv_posit, window=window, apos=apos)
+
+
+def decode_attention_paged_mla(q_lat_eff, q_rope, c_arena, r_arena, tables,
+                               lens, *, cfg: ModelConfig,
+                               kv_posit: Optional[str] = None,
+                               kernel: str = "gather",
+                               interpret: bool = True):
+    """Absorbed-matrix MLA paged decode: latent-space attention off the
+    block tables; returns the latent context (B, H, rank) f32 (the
+    caller applies ``wuv``).
+
+    Same kernel dispatch contract as :func:`decode_attention_paged`;
+    the fused kernel concatenates the latent (``c``) and decoupled-RoPE
+    (``r``) blocks in VMEM and uses the latent block as V.  The gather
+    fallback carries the same all-masked guard as
+    :func:`decode_attention`: a fully-masked row yields zeros, not the
+    uniform garbage average ``jax.nn.softmax`` would produce.
+    """
+    b, h, _ = q_lat_eff.shape
+    nb, bs = c_arena.shape[0], c_arena.shape[1]
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    apos = paged_apos(tables, lens, bs, nb)
+    if kernel == "fused":
+        from repro.kernels import posit_paged_attn as K  # lazy: pallas
+        return K.paged_decode_attention_mla(
+            q_lat_eff.astype(jnp.float32), q_rope.astype(jnp.float32),
+            c_arena, r_arena, tables, apos, lens,
+            pcfg=pcfg(kv_posit) if kv_posit else None,
+            scale=scale, interpret=interpret)
+    if kernel != "gather":
+        raise ValueError(f"unknown paged decode kernel {kernel!r}")
+    c = paged_gather(c_arena, tables)                 # (B, W*bs, rank)
+    r = paged_gather(r_arena, tables)
+    if kv_posit:
+        c = posit_to_f32(c, pcfg(kv_posit))
+        r = posit_to_f32(r, pcfg(kv_posit))
+    c = c.astype(jnp.float32)
+    r = r.astype(jnp.float32)
+    scores = jnp.einsum("bhr,btr->bht", q_lat_eff.astype(jnp.float32), c)
+    scores += jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32), r)
+    valid = (apos >= 0) & (apos <= lens[:, None])     # content [0, lens]
+    scores = jnp.where(valid[:, None, :], scores * scale, _NEG)
+    m = scores.max(-1, keepdims=True)
+    p = jnp.where(valid[:, None, :], jnp.exp(scores - m), 0.0)
+    probs = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return jnp.einsum("bht,btr->bhr", probs, c)       # (B, H, rank)
 
 
 def paged_cache_update(arena, upd, tables, pos, ok, *, window: int = 0):

@@ -732,13 +732,13 @@ def _decode_attn_mla(p, x, c_cache, r_cache, pos, lens, cfg: ModelConfig):
 def _decode_attn_dense_paged(p, x, k_arena, v_arena, tables, lens, ok,
                              cfg: ModelConfig):
     """Paged dense/GQA decode: per-row write position ``lens[b]`` into the
-    row's block, then attention over the gathered virtual cache.  The
-    same projections, RoPE positions (content-relative ``lens``) and
-    softmax math as the linear lane — only the storage addressing
-    differs, so the scores over valid positions are identical."""
+    row's block, then attention straight off the block tables
+    (``cfg.paged_attn_kernel`` picks the fused Pallas table walk or the
+    gather+jnp reference).  The same projections, RoPE positions
+    (content-relative ``lens``) and softmax math as the linear lane —
+    only the storage addressing differs, so the scores over valid
+    positions are identical."""
     b = x.shape[0]
-    bs = k_arena.shape[1]
-    w = tables.shape[1]
     window = _paged_window(cfg)
     q = L.dense(p["wq"], x, cfg).reshape(b, 1, cfg.n_heads, cfg.head_dim)
     k = L.dense(p["wk"], x, cfg).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
@@ -752,22 +752,20 @@ def _decode_attn_dense_paged(p, x, k_arena, v_arena, tables, lens, ok,
     v_arena = L.paged_cache_update(
         v_arena, _maybe_quant_kv(v, cfg)[:, 0], tables, lens, ok,
         window=window)
-    ks = L.paged_gather(k_arena, tables)
-    vs = L.paged_gather(v_arena, tables)
-    apos = L.paged_positions(lens, w, bs, window=window)
-    out = L.decode_attention(
-        q, ks, vs, lens + 1, cfg=cfg, kv_posit=cfg.kv_posit,
-        window=window, start=None, apos=apos)
+    out = L.decode_attention_paged(
+        q, k_arena, v_arena, tables, lens, cfg=cfg,
+        kv_posit=cfg.kv_posit, window=window,
+        kernel=cfg.paged_attn_kernel)
     out = out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     return L.dense(p["wo"], out, cfg), k_arena, v_arena
 
 
 def _decode_attn_mla_paged(p, x, c_arena, r_arena, tables, lens, ok,
                            cfg: ModelConfig):
-    """Paged absorbed-matrix MLA decode (row-local positions)."""
+    """Paged absorbed-matrix MLA decode (row-local positions);
+    ``cfg.paged_attn_kernel`` picks the fused latent-space table walk
+    or the gather+jnp reference."""
     b = x.shape[0]
-    bs = c_arena.shape[1]
-    w = tables.shape[1]
     q_lat = L.rms_norm(p["q_norm"], L.dense(p["wdq"], x, cfg), cfg)
     q = L.dense(p["wuq"], q_lat, cfg).reshape(
         b, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
@@ -785,26 +783,12 @@ def _decode_attn_mla_paged(p, x, c_arena, r_arena, tables, lens, ok,
     r_arena = L.paged_cache_update(
         r_arena, _maybe_quant_kv(r_new, cfg)[:, 0], tables, lens, ok)
 
-    c = L.paged_gather(c_arena, tables)                   # (B, W*bs, rank)
-    r = L.paged_gather(r_arena, tables)
-    if cfg.kv_posit:
-        from repro.core.convert import posit_to_f32
-        c = posit_to_f32(c, L.pcfg(cfg.kv_posit))
-        r = posit_to_f32(r, L.pcfg(cfg.kv_posit))
-    c = c.astype(jnp.float32)
-    r = r.astype(jnp.float32)
-
     wuk = L.maybe_dequant(p["wuk"]["w"], cfg).reshape(
         cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_dim)
     q_lat_eff = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32), wuk)
-    scores = jnp.einsum("bhr,btr->bht", q_lat_eff, c)
-    scores += jnp.einsum("bhd,btd->bht", q_rope.astype(jnp.float32), r)
-    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
-    t_pos = jnp.arange(w * bs)
-    valid = t_pos[None, :] <= lens[:, None]               # content [0,lens]
-    scores = jnp.where(valid[:, None, :], scores * scale, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1)
-    ctx_lat = jnp.einsum("bht,btr->bhr", probs, c)        # (B,H,rank)
+    ctx_lat = L.decode_attention_paged_mla(
+        q_lat_eff, q_rope, c_arena, r_arena, tables, lens, cfg=cfg,
+        kv_posit=cfg.kv_posit, kernel=cfg.paged_attn_kernel)
     wuv = L.maybe_dequant(p["wuv"]["w"], cfg).reshape(
         cfg.kv_lora_rank, cfg.n_heads, cfg.v_head_dim)
     out = jnp.einsum("bhr,rhv->bhv", ctx_lat, wuv)

@@ -81,7 +81,7 @@ class Engine:
                  temperature: float = 0.0, seed: int = 0,
                  pad_id: int = 0, paged: bool = False,
                  block_size: int = 16, n_blocks: int = 0,
-                 sanitize: bool = False):
+                 sanitize: bool = False, decode_kernel: str = None):
         """``paged=True`` swaps the dense preallocated cache for the
         block-table layout (transformer family only): prefill allocates
         arena blocks per row from a host-side ``BlockPool`` free list
@@ -91,7 +91,22 @@ class Engine:
         ``sanitize=True`` arms the arena sanitizer: pools are created
         with ``BlockPool(sanitize=True)`` (double-free/use-after-free/
         COW-skip detection) and reclaimed blocks are poisoned on device
-        via :meth:`poison_blocks` so stale table entries detonate."""
+        via :meth:`poison_blocks` so stale table entries detonate.
+        ``decode_kernel`` selects the paged decode-attention path:
+        ``'gather'`` (jnp reference) or ``'fused'`` (the Pallas
+        block-table-walk kernel, ``kernels/posit_paged_attn.py``);
+        it threads through ``cfg.paged_attn_kernel`` so every jitted
+        decode program closes over the choice."""
+        if decode_kernel is not None:
+            if decode_kernel not in ("gather", "fused"):
+                raise ValueError(
+                    f"decode_kernel must be 'gather' or 'fused', got "
+                    f"{decode_kernel!r}")
+            if not paged:
+                raise ValueError(
+                    "decode_kernel selects the PAGED decode attention "
+                    "path; construct the engine with paged=True")
+            cfg = dataclasses.replace(cfg, paged_attn_kernel=decode_kernel)
         self.cfg = cfg
         self.params = params
         self.fam = get_family(cfg)

@@ -1,0 +1,71 @@
+"""Benchmark delta-vs-baseline reporting regressions.
+
+``benchmarks/run.py`` compares fresh suite rows against the committed
+baselines under ``benchmarks/baselines/``.  Only one suite has a
+committed baseline (serve), so the no-baseline path runs for every
+other suite on every CI invocation — it must REPORT that state, not
+crash and not silently skip (a silent skip reads as "no change" when
+it means "nothing to compare against").  Corrupt or partially-matching
+baselines must degrade to warnings too.
+"""
+import importlib.util
+import json
+import os
+
+_RUN_PY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       os.pardir, "benchmarks", "run.py")
+
+
+def _load_run():
+    spec = importlib.util.spec_from_file_location("bench_run", _RUN_PY)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+ROWS = [("row_a", 10.0, "tok_s=100.0 gen=8"),
+        ("row_b", 5.0, "bytes=2048")]
+
+
+def test_missing_baseline_reports_explicitly(tmp_path, capsys):
+    run = _load_run()
+    run._print_deltas("nosuch", ROWS, baselines_dir=str(tmp_path))
+    err = capsys.readouterr().err
+    assert "nosuch: no committed baseline" in err
+    assert "BENCH_nosuch.json" in err          # says where to put one
+
+
+def test_corrupt_baseline_warns_and_skips(tmp_path, capsys):
+    run = _load_run()
+    (tmp_path / "BENCH_bad.json").write_text("{not json")
+    run._print_deltas("bad", ROWS, baselines_dir=str(tmp_path))
+    assert "unreadable" in capsys.readouterr().err
+
+
+def test_partial_baseline_flags_new_rows_and_deltas(tmp_path, capsys):
+    run = _load_run()
+    base = {"suite": "s", "rows": [
+        {"name": "row_a", "us_per_call": 20.0,
+         "derived": {"tok_s": 50.0, "gen": 8, "note": "text"}}]}
+    (tmp_path / "BENCH_s.json").write_text(json.dumps(base))
+    run._print_deltas("s", ROWS, baselines_dir=str(tmp_path))
+    err = capsys.readouterr().err
+    assert "row_a delta vs baseline" in err    # us halved, tok_s doubled
+    assert "tok_s 50->100" in err
+    assert "row_b: new row (no baseline)" in err
+
+
+def test_committed_serve_baseline_is_readable():
+    """The one committed baseline must parse and carry the decode-bytes
+    metric the fused-kernel comparison reports."""
+    path = os.path.join(os.path.dirname(_RUN_PY), "baselines",
+                        "BENCH_serve.json")
+    with open(path) as f:
+        data = json.load(f)
+    rows = {r["name"]: r for r in data["rows"]}
+    fused = [r for name, r in rows.items()
+             if name.startswith("serve_paged_fused")]
+    assert fused, "baseline lacks the fused paged-decode row"
+    derived = fused[0]["derived"]
+    assert derived["decode_kv_B_tok_fused_posit16"] < \
+        derived["decode_kv_B_tok_gather_posit16"]

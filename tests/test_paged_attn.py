@@ -1,0 +1,306 @@
+"""Fused paged-decode attention kernel tests.
+
+The tentpole invariant: ``kernels/posit_paged_attn.py`` — one Pallas
+kernel walking each row's block table with a sequential grid dimension,
+posit decode in-kernel, online-softmax state carried in VMEM scratch —
+must be invisible to the numbers.  Pinned three ways:
+
+* layer level, fused vs the gather+``decode_attention`` reference on
+  the dense/GQA, sliding-window block-ring (including wraparound) and
+  MLA latent lanes, across posit8/posit16/f32 KV and ragged ``lens``
+  (fast seeded subset here, ``slow``-marked exhaustive sweep below);
+* engine level, token identity fused vs gather vs the LINEAR ring on
+  all three lanes through ``Engine.generate``, and through the
+  scheduler's preemption-restart path;
+* the all-masked-row regression: a row with no valid slot (an inactive
+  or preempted scheduler slot whose sentinel table entries alias real
+  blocks through the gather clamp) must yield EXACT ZEROS — the old
+  ``exp(_NEG - _NEG) == 1`` path returned a uniform average of garbage
+  — on the linear path, the paged gather path and the fused kernel.
+
+Everything runs the kernel in Pallas interpret mode (CPU container);
+the CI fast lane executes this file explicitly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.kernels import ops as kops
+from repro.kernels.posit_paged_attn import paged_decode_kv_bytes
+from repro.models import get_family
+from repro.models import layers as L
+from repro.runtime.engine import Engine
+from repro.runtime.scheduler import Scheduler
+
+LANES = ["dense", "mla", "window"]
+KV_FORMATS = [None, "posit16", "posit8"]
+
+
+def _cfg(lane, **kw):
+    if lane == "mla":
+        return configs.get_config("minicpm3-4b").reduced(
+            compute_dtype="float32", **kw)
+    cfg = configs.get_config("phi3-medium-14b").reduced(
+        compute_dtype="float32", **kw)
+    if lane == "window":
+        cfg = dataclasses.replace(cfg, sliding_window=8, attn_chunk_kv=8)
+    return cfg
+
+
+def _params(cfg, seed=0):
+    return get_family(cfg).init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def _arena(rng, shape, kv):
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    return kops.quantize(x, L.pcfg(kv)) if kv else x
+
+
+# ---------------------------------------------------------------------------
+# layer-level identity: fused kernel vs gather + decode_attention
+# ---------------------------------------------------------------------------
+
+def _dense_case(rng, kv, window, lens):
+    """A small dense/window paged-decode problem with one sentinel tail."""
+    cfg = dataclasses.replace(_cfg("window" if window else "dense"),
+                              kv_posit=kv)
+    g, h, d, bs = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim, 4
+    lens = jnp.asarray(lens, jnp.int32)
+    b = lens.shape[0]
+    w = L.paged_window_blocks(window, bs) if window else 5
+    nb = b * w
+    tables = jnp.arange(nb, dtype=jnp.int32).reshape(b, w)
+    tables = tables.at[-1, -1].set(nb)          # unallocated tail: sentinel
+    k_arena = _arena(rng, (nb, bs, g, d), kv)
+    v_arena = _arena(rng, (nb, bs, g, d), kv)
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+    return cfg, q, k_arena, v_arena, tables, lens
+
+
+def _dense_both(case, window):
+    cfg, q, k_arena, v_arena, tables, lens = case
+    return [L.decode_attention_paged(
+        q, k_arena, v_arena, tables, lens, cfg=cfg, kv_posit=cfg.kv_posit,
+        window=window, kernel=kern) for kern in ("fused", "gather")]
+
+
+@pytest.mark.parametrize("kv", [None, "posit16"])
+def test_fused_matches_gather_dense(kv):
+    rng = np.random.default_rng(5)
+    fused, ref = _dense_both(
+        _dense_case(rng, kv, 0, [9, 2, 17]), 0)
+    np.testing.assert_allclose(fused, ref, atol=2e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("kv", [None, "posit8"])
+def test_fused_matches_gather_ring_wraparound(kv):
+    """Window lane with frontiers past the ring capacity: the stale half
+    of the frontier's own block must be masked identically in-kernel."""
+    window = 8
+    rng = np.random.default_rng(6)
+    # 13 and 22 both wrap the W=3-block ring (capacity 12 slots); 2 does
+    # not — the same kernel grid must honor both regimes per-row
+    fused, ref = _dense_both(
+        _dense_case(rng, kv, window, [13, 2, 22]), window)
+    np.testing.assert_allclose(fused, ref, atol=2e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("kv", [None, "posit16"])
+def test_fused_matches_gather_mla(kv):
+    rng = np.random.default_rng(7)
+    cfg = dataclasses.replace(_cfg("mla"), kv_posit=kv)
+    h, rank, rope, bs, w = (cfg.n_heads, cfg.kv_lora_rank,
+                            cfg.qk_rope_dim, 4, 5)
+    lens = jnp.array([9, 14, 0], jnp.int32)
+    b = lens.shape[0]
+    nb = b * w
+    tables = jnp.arange(nb, dtype=jnp.int32).reshape(b, w)
+    tables = tables.at[0, -1].set(nb)
+    c_arena = _arena(rng, (nb, bs, rank), kv)
+    r_arena = _arena(rng, (nb, bs, rope), kv)
+    qe = jnp.asarray(rng.normal(size=(b, h, rank)), jnp.float32)
+    qr = jnp.asarray(rng.normal(size=(b, h, rope)), jnp.float32)
+    outs = [L.decode_attention_paged_mla(
+        qe, qr, c_arena, r_arena, tables, lens, cfg=cfg,
+        kv_posit=kv, kernel=kern) for kern in ("fused", "gather")]
+    np.testing.assert_allclose(outs[0], outs[1], atol=2e-6, rtol=1e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kv", KV_FORMATS)
+@pytest.mark.parametrize("window", [0, 8])
+def test_fused_matches_gather_exhaustive(kv, window):
+    """Exhaustive ragged sweep: every frontier from empty to deep ring
+    wraparound, all KV formats, both dense and window lanes."""
+    rng = np.random.default_rng(8)
+    for lo in range(0, 24, 3):
+        lens = [lo, lo + 1, lo + 7]
+        fused, ref = _dense_both(
+            _dense_case(rng, kv, window, lens), window)
+        np.testing.assert_allclose(fused, ref, atol=2e-6, rtol=1e-5,
+                                   err_msg=f"kv={kv} lens={lens}")
+
+
+# ---------------------------------------------------------------------------
+# all-masked-row regression (the bug this kernel builds on)
+# ---------------------------------------------------------------------------
+
+def test_all_masked_row_returns_zeros_linear():
+    """A row whose every cache slot is masked (cache_len 0) used to get
+    ``exp(_NEG - _NEG) == 1`` everywhere — a uniform average of garbage
+    cache content.  It must be exact zeros, and rows WITH valid slots
+    must be bit-identical to before the guard."""
+    cfg = _cfg("dense")
+    rng = np.random.default_rng(9)
+    b, t, g, h, d = 2, 8, cfg.n_kv_heads, cfg.n_heads, cfg.head_dim
+    q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+    # garbage-heavy cache: any leak through the softmax is loud
+    k = jnp.asarray(rng.normal(size=(b, t, g, d)) * 1e3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, g, d)) * 1e3, jnp.float32)
+    out = L.decode_attention(q, k, v, jnp.array([5, 0], jnp.int32),
+                             cfg=cfg)
+    assert float(jnp.abs(out[1]).max()) == 0.0
+    assert float(jnp.abs(out[0]).max()) > 0.0
+    solo = L.decode_attention(q[:1], k[:1], v[:1],
+                              jnp.array([5], jnp.int32), cfg=cfg)
+    np.testing.assert_array_equal(out[0], solo[0])
+
+
+@pytest.mark.parametrize("kernel", ["gather", "fused"])
+def test_all_masked_row_returns_zeros_paged(kernel):
+    """An all-sentinel block table (a preempted slot after its blocks
+    were released) aliases arbitrary real blocks through the gather
+    clamp / the kernel's DMA clamp; both paths must return zeros."""
+    cfg = _cfg("dense")
+    rng = np.random.default_rng(10)
+    g, h, d, bs, w, nb = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim, 4, 3, 6
+    k_arena = _arena(rng, (nb, bs, g, d), None) * 1e3
+    v_arena = _arena(rng, (nb, bs, g, d), None) * 1e3
+    q = jnp.asarray(rng.normal(size=(2, 1, h, d)), jnp.float32)
+    tables = jnp.stack([jnp.arange(w, dtype=jnp.int32),
+                        jnp.full((w,), nb, jnp.int32)])   # row 1: sentinel
+    out = L.decode_attention_paged(
+        q, k_arena, v_arena, tables, jnp.array([5, 5], jnp.int32),
+        cfg=cfg, kernel=kernel)
+    assert float(jnp.abs(out[1]).max()) == 0.0
+    assert float(jnp.abs(out[0]).max()) > 0.0
+
+
+@pytest.mark.parametrize("kernel", ["gather", "fused"])
+def test_all_masked_row_returns_zeros_mla(kernel):
+    cfg = _cfg("mla")
+    rng = np.random.default_rng(11)
+    h, rank, rope, bs, w, nb = (cfg.n_heads, cfg.kv_lora_rank,
+                                cfg.qk_rope_dim, 4, 3, 6)
+    c_arena = _arena(rng, (nb, bs, rank), None) * 1e3
+    r_arena = _arena(rng, (nb, bs, rope), None) * 1e3
+    qe = jnp.asarray(rng.normal(size=(2, h, rank)), jnp.float32)
+    qr = jnp.asarray(rng.normal(size=(2, h, rope)), jnp.float32)
+    tables = jnp.stack([jnp.arange(w, dtype=jnp.int32),
+                        jnp.full((w,), nb, jnp.int32)])
+    out = L.decode_attention_paged_mla(
+        qe, qr, c_arena, r_arena, tables, jnp.array([5, 5], jnp.int32),
+        cfg=cfg, kernel=kernel)
+    assert float(jnp.abs(out[1]).max()) == 0.0
+    assert float(jnp.abs(out[0]).max()) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine-level token identity: fused vs gather vs the linear ring
+# ---------------------------------------------------------------------------
+
+def _gen_tokens(cfg, params, prompts, gen, **eng_kw):
+    eng = Engine(cfg, params, max_len=32, seed=0, **eng_kw)
+    return eng.generate(prompts, gen).tokens
+
+
+@pytest.mark.parametrize("lane", LANES)
+def test_engine_fused_token_identity(lane):
+    """Fused paged decode == gather paged decode == the LINEAR cache
+    (ring buffer on the window lane), token for token, on ragged
+    prompts with generation long enough to wrap the block ring."""
+    cfg = _cfg(lane, kv_posit="posit16")
+    params = _params(cfg)
+    rng = np.random.default_rng(12)
+    prompts = [list(rng.integers(1, cfg.vocab, size=n)) for n in (5, 9, 3)]
+    gen = 20              # window=8, block=4: wraps the W=3 ring twice
+    linear = _gen_tokens(cfg, params, prompts, gen)
+    gather = _gen_tokens(cfg, params, prompts, gen, paged=True,
+                         block_size=4, decode_kernel="gather")
+    fused = _gen_tokens(cfg, params, prompts, gen, paged=True,
+                        block_size=4, decode_kernel="fused")
+    np.testing.assert_array_equal(gather, linear)
+    np.testing.assert_array_equal(fused, gather)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("lane", LANES)
+@pytest.mark.parametrize("kv", KV_FORMATS)
+def test_engine_fused_token_identity_exhaustive(lane, kv):
+    cfg = _cfg(lane, kv_posit=kv)
+    params = _params(cfg)
+    rng = np.random.default_rng(13)
+    prompts = [list(rng.integers(1, cfg.vocab, size=n))
+               for n in (7, 2, 11, 4)]
+    gather = _gen_tokens(cfg, params, prompts, 20, paged=True,
+                         block_size=4, decode_kernel="gather")
+    fused = _gen_tokens(cfg, params, prompts, 20, paged=True,
+                        block_size=4, decode_kernel="fused")
+    np.testing.assert_array_equal(fused, gather)
+
+
+def test_fused_survives_preemption_restart():
+    """Preemption-by-block-release then restart, decoding through the
+    fused kernel: the preempted request's stream must match isolated
+    greedy generation and no arena block may leak (the released rows'
+    all-sentinel tables hit the kernel's masked path every step)."""
+    cfg = _cfg("dense", kv_posit="posit16")
+    params = _params(cfg)
+    rng = np.random.default_rng(14)
+    p_a = rng.integers(1, cfg.vocab, 8).tolist()
+    p_b = rng.integers(1, cfg.vocab, 8).tolist()
+    ref_eng = Engine(cfg, params, max_len=32, paged=True, block_size=4,
+                     decode_kernel="fused")
+    ref_a = ref_eng.generate([p_a], 8).tokens[0]
+    ref_b = ref_eng.generate([p_b], 8).tokens[0]
+
+    # 6-block pool: two requests can never be resident together, so the
+    # deadline submission MUST preempt the best-effort one
+    eng = Engine(cfg, params, max_len=32, paged=True, block_size=4,
+                 n_blocks=6, sanitize=True, decode_kernel="fused")
+    sched = Scheduler(eng, n_slots=2, chunk_size=4, chunked_prefill=True)
+    ra = sched.submit(p_a, 8)
+    sched.step()
+    rb = sched.submit(p_b, 8, deadline=20)
+    done = sched.run(max_rounds=300)
+    assert sched.n_preempted >= 1
+    np.testing.assert_array_equal(done[ra].tokens, ref_a)
+    np.testing.assert_array_equal(done[rb].tokens, ref_b)
+    assert sched.n_leaked == 0 and not sched.leak_report()
+
+
+# ---------------------------------------------------------------------------
+# decode-bytes ledger
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lane", LANES)
+@pytest.mark.parametrize("kv", KV_FORMATS)
+def test_fused_moves_strictly_fewer_bytes(lane, kv):
+    """The point of the kernel: one pattern-width pass over KV instead
+    of gather + dequant round-trips, for every lane and KV format."""
+    cfg = _cfg(lane, kv_posit=kv)
+    fused = paged_decode_kv_bytes(cfg, table_width=8, block_size=4,
+                                  kernel="fused")
+    gather = paged_decode_kv_bytes(cfg, table_width=8, block_size=4,
+                                   kernel="gather")
+    assert 0 < fused < gather
+    if kv == "posit8":        # posit8 patterns: half an f16 cache's bytes
+        f16_read = paged_decode_kv_bytes(
+            dataclasses.replace(cfg, kv_posit=None), table_width=8,
+            block_size=4, kernel="fused") // 2
+        assert fused * 2 == f16_read
