@@ -53,14 +53,24 @@ engine compile count after warmup and beat the unchunked pass on p99
 WALL-CLOCK request latency — the tail a recompile stall actually
 inflates (simulation-clock latency alone cannot see it).
 
+The sharded section replays one chunked-prefill paged trace through a
+single-device engine and a tensor-parallel engine over a host device
+mesh (weights by the ``runtime/sharding.py`` rule table, the KV block
+arena head-sharded over 'model') and asserts per-request token AND
+schedule identity — sharding must be invisible to the trace — plus the
+point of the exercise: each device holds ~1/mp of the arena content
+bytes, within one block of slack.  Needs >= 2 devices; on CPU force
+them with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 ``--smoke`` shrinks the sweep for the CI fast lane (exercises prefill
 headroom, ring-free dense decode, both posit codecs, and the
 continuous-batching scheduler end to end); ``--paged`` runs ONLY the
 paged-vs-compaction comparison (the fast lane's paged smoke),
 ``--prefix-share`` adds (or alone, runs only) the prefix-caching
-comparison, and ``--chunked`` runs ONLY the chunked-prefill
-comparison.  ``--sanitize`` arms the arena sanitizer on the paged,
-prefix and chunked passes (``BlockPool(sanitize=True)`` misuse checks,
+comparison, ``--chunked`` runs ONLY the chunked-prefill comparison,
+and ``--sharded`` runs ONLY the tensor-parallel comparison.
+``--sanitize`` arms the arena sanitizer on the paged, prefix, chunked
+and sharded passes (``BlockPool(sanitize=True)`` misuse checks,
 pre-chunk write gates, poisoned reclaims) and asserts the traces end
 leak-free — the CI smoke runs with it so every PR replays the serving
 trace under the sanitizer.
@@ -68,6 +78,7 @@ trace under the sanitizer.
 from __future__ import annotations
 
 import dataclasses
+import math
 import sys
 import time
 
@@ -142,6 +153,7 @@ def run(smoke: bool = False, paged: bool = True):
         rows.extend(run_paged_comparison(smoke=smoke))
         rows.extend(run_prefix_comparison(smoke=smoke))
         rows.extend(run_chunked_comparison(smoke=smoke))
+        rows.extend(run_sharded_comparison(smoke=smoke))
     return rows
 
 
@@ -538,12 +550,105 @@ def run_chunked_comparison(smoke: bool = False, sanitize: bool = False):
     return rows
 
 
+def run_sharded_comparison(smoke: bool = False, sanitize: bool = False):
+    """Tensor-parallel vs single-device serving on one paged trace.
+
+    Builds a host mesh over all local devices with the largest 'model'
+    degree dividing both the device count and the config's KV heads,
+    replays the SAME chunked-prefill paged trace through a
+    single-device engine and a mesh engine (weights by the
+    ``runtime/sharding.py`` rule table, arena heads on 'model'), and
+    asserts per-request token AND schedule identity — sharding the
+    arena must be invisible to the trace.  The byte ledger then gates
+    the point of the exercise: each device's arena CONTENT footprint is
+    at most ``content / mp`` plus one block of slack (replicated
+    block-table metadata rides on every shard and is accounted
+    separately).  Needs >= 2 devices (on CPU force them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``); returns no
+    rows otherwise, which the baseline delta machinery tolerates.
+    """
+    n_dev = len(jax.devices())
+    heads = 4                          # a head count mp can divide
+    mp = math.gcd(n_dev, heads)
+    if mp < 2:
+        print(f"# serve_sharded: skipped ({n_dev} device(s); force "
+              "more with XLA_FLAGS=--xla_force_host_platform_device_"
+              "count=8)", file=sys.stderr, flush=True)
+        return []
+    if smoke:
+        n_req, n_slots, plen, gen, chunk, rate = 8, 2, 8, 8, 4, 1.0
+    else:
+        n_req, n_slots, plen, gen, chunk, rate = 16, 4, 16, 16, 4, 1.2
+    block = 4
+    max_len = plen + gen - 1 + chunk
+    cfg = dataclasses.replace(
+        configs.get_config(ARCH).reduced(compute_dtype="float32"),
+        n_heads=heads, n_kv_heads=heads)
+    params = get_family(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    trace = poisson_trace(np.random.default_rng(11), n_req, rate,
+                          cfg.vocab, plen, gen)
+
+    def _pass(mesh):
+        eng = Engine(cfg, params, max_len=max_len, seed=0, paged=True,
+                     block_size=block, sanitize=sanitize, mesh=mesh)
+        sched = Scheduler(eng, n_slots=n_slots, chunk_size=chunk,
+                          chunked_prefill=True)
+        t0 = time.perf_counter()
+        done, _ = drive_trace(sched, trace)
+        return done, sched, time.perf_counter() - t0
+
+    done_1, _, base_wall = _pass(None)
+    from repro.launch.mesh import make_host_mesh
+    done_s, sched_s, s_wall = _pass(make_host_mesh(mp))
+
+    assert done_1.keys() == done_s.keys()
+    for rid in done_1:
+        assert (done_s[rid].tokens == done_1[rid].tokens).all(), \
+            f"sharded serving changed the tokens of request {rid}"
+        assert done_s[rid].finished_step == done_1[rid].finished_step, \
+            f"sharded serving changed the schedule of request {rid}"
+    if sanitize:
+        assert sched_s.n_leaked == 0 and not sched_s.leak_report(), \
+            f"sanitizer found leaked arena blocks: {sched_s.leak_report()}"
+
+    spec = sched_s.cache["k"].sharding.spec
+    assert "model" in spec, \
+        f"arena k is not head-sharded over 'model': spec={spec}"
+    rep = cache_report(sched_s.cache)
+    content = sum(int(np.prod(sched_s.cache[k].shape)) *
+                  sched_s.cache[k].dtype.itemsize for k in ("k", "v"))
+    meta = rep["bytes"] - content
+    per_dev_content = rep["per_device_bytes"] - meta
+    n_blocks = sched_s.cache["k"].shape[1]
+    one_block = content // n_blocks
+    assert per_dev_content <= content // mp + one_block, (
+        f"per-device arena content {per_dev_content} B exceeds "
+        f"content/mp + one block ({content // mp} + {one_block} B) "
+        f"at model_parallel={mp}")
+    stats = sched_s.stats
+    return [
+        (f"serve_sharded_mp{mp}_b{n_slots}_n{n_req}_c{chunk}",
+         s_wall * 1e6,
+         f"tokens_match_single_device=1.0 model_parallel={mp} "
+         f"n_devices={n_dev} "
+         f"per_device_kv_bytes={rep['per_device_bytes']} "
+         f"total_kv_bytes={rep['bytes']} "
+         f"per_device_content_bytes={per_dev_content} "
+         f"content_bytes={content} "
+         f"content_shard_frac={per_dev_content / content:.3f} "
+         f"step_wall_p50_ms={stats['step_wall_p50_ms']:.1f} "
+         f"step_wall_p99_ms={stats['step_wall_p99_ms']:.1f} "
+         f"wall_vs_single={s_wall / max(base_wall, 1e-9):.2f}x"),
+    ]
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     smoke = "--smoke" in argv
     sanitize = "--sanitize" in argv
     print("name,us_per_call,derived")
-    sections = [f for f in ("--paged", "--prefix-share", "--chunked")
+    sections = [f for f in ("--paged", "--prefix-share", "--chunked",
+                            "--sharded")
                 if f in argv]
     if sections:                       # run ONLY the named sections
         rows = []
@@ -553,6 +658,8 @@ if __name__ == "__main__":
             rows += run_prefix_comparison(smoke=smoke, sanitize=sanitize)
         if "--chunked" in argv:
             rows += run_chunked_comparison(smoke=smoke, sanitize=sanitize)
+        if "--sharded" in argv:
+            rows += run_sharded_comparison(smoke=smoke, sanitize=sanitize)
     else:
         rows = run(smoke=smoke, paged=not smoke)
         if smoke:

@@ -18,6 +18,13 @@ The rules encode bug classes we actually shipped:
   jit-decorated or scan-body functions (trace-safety hazards).
 - PVU005 — reaching into ``BlockPool`` private allocator state outside
   ``compress/kvcache.py`` (bypasses the refcount/COW invariants).
+- PVU006 — jit static args that specialize on prompt-length-like
+  values outside ``runtime/engine.py`` (the recompile-per-prompt stall
+  chunked prefill deleted).
+- PVU007 — ``device_put``/array creation of cache or arena leaves in
+  ``runtime/``/``models/`` without ``NamedSharding``/
+  ``with_sharding_constraint`` (implicit replication defeats the
+  head-sharded arena's per-device footprint).
 
 Findings are waivable per line with ``# positcheck: disable=PVU001``
 (comma-separated ids, or ``all``).  The waiver must sit on the line the

@@ -1,4 +1,4 @@
-"""The positcheck rules (PVU001–PVU006).
+"""The positcheck rules (PVU001–PVU007).
 
 Each rule is a bug class this repo actually shipped (or nearly did);
 see the module docstring of :mod:`repro.analysis` and the "Invariants &
@@ -414,6 +414,100 @@ class PromptLenSpecialization(Rule):
                             )
 
 
+# ---------------------------------------------------------------------------
+# PVU007 — cache/arena placement without sharding machinery
+
+
+class UnshardedCachePlacement(Rule):
+    id = "PVU007"
+    severity = "error"
+    title = "cache/arena leaf placed or created without sharding machinery"
+    hint = (
+        "a bare jax.device_put (or a fresh zeros/full arena) in runtime/ "
+        "or models/ implicitly REPLICATES the KV cache on every device, "
+        "silently forfeiting the per-shard footprint the head-sharded "
+        "arena exists for; place cache trees through Engine.shard_cache / "
+        "sharding.paged_cache_shardings (NamedSharding) or pin views with "
+        "lax.with_sharding_constraint.  Sanctioned constructors (init_* "
+        "functions, whose output the engine places) are exempt; anything "
+        "else that must stay gets '# positcheck: disable=PVU007' plus a "
+        "comment naming where placement happens."
+    )
+
+    SCOPED_DIRS = ("runtime", "models")
+    CREATORS = {"zeros", "full", "empty", "zeros_like", "full_like"}
+    SHARDY = ("shard", "constraint")
+
+    @staticmethod
+    def _cache_or_arena(node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and (
+                    "cache" in sub.id.lower() or "arena" in sub.id.lower()):
+                return True
+            if isinstance(sub, ast.Attribute) and (
+                    "cache" in sub.attr.lower()
+                    or "arena" in sub.attr.lower()):
+                return True
+        return False
+
+    def _shardingish(self, node: ast.AST) -> bool:
+        for sub in ast.walk(node):
+            name = ""
+            if isinstance(sub, (ast.Name, ast.Attribute)):
+                name = self.dotted_name(sub) or getattr(sub, "attr", "")
+            if any(s in name.lower() for s in self.SHARDY):
+                return True
+        return False
+
+    def check(self, mod: ModuleFile):
+        if not _in_dirs(mod, *self.SCOPED_DIRS):
+            return
+        # arm 1: device_put of a cache/arena tree with no sharding arg
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if self.call_name(node).rsplit(".", 1)[-1] != "device_put":
+                continue
+            if not node.args or not self._cache_or_arena(node.args[0]):
+                continue
+            rest = list(node.args[1:]) + [kw.value for kw in node.keywords]
+            if not rest or not any(self._shardingish(a) for a in rest):
+                yield node, (
+                    "device_put of a cache/arena tree without a "
+                    "NamedSharding — implicit replication on every device"
+                )
+        # arm 2: a fresh cache/arena materialized outside the sanctioned
+        # init_* constructors, in a function that never touches sharding
+        def walk(node: ast.AST, fn):
+            for child in ast.iter_child_nodes(node):
+                child_fn = fn
+                if isinstance(child,
+                              (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    child_fn = child
+                if isinstance(child, (ast.Assign, ast.AnnAssign)):
+                    yield child, fn
+                yield from walk(child, child_fn)
+
+        for assign, fn in walk(mod.tree, None):
+            value = getattr(assign, "value", None)
+            if not isinstance(value, ast.Call):
+                continue
+            if self.call_name(value).rsplit(".", 1)[-1] not in self.CREATORS:
+                continue
+            targets = (assign.targets if isinstance(assign, ast.Assign)
+                       else [assign.target])
+            if not any(self._cache_or_arena(t) for t in targets):
+                continue
+            if fn is not None and (fn.name.startswith("init")
+                                   or self._shardingish(fn)):
+                continue
+            yield assign, (
+                "fresh cache/arena materialized outside an init_* "
+                "constructor with no sharding in sight — it lands "
+                "replicated on every device"
+            )
+
+
 ALL_RULES: tuple[Rule, ...] = (
     RawCacheWrite(),
     RequantRoundTrip(),
@@ -421,6 +515,7 @@ ALL_RULES: tuple[Rule, ...] = (
     TracedBranch(),
     PoolPrivateAccess(),
     PromptLenSpecialization(),
+    UnshardedCachePlacement(),
 )
 
 

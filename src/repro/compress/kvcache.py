@@ -126,6 +126,20 @@ def cache_bytes(cache) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
 
 
+def _shard_bytes(x) -> int:
+    """Bytes of ``x`` resident on one device: the per-shard shape when
+    the leaf carries a (Named)Sharding, the full size otherwise (plain
+    numpy leaves, abstract shapes)."""
+    sharding = getattr(x, "sharding", None)
+    if sharding is None or not hasattr(sharding, "shard_shape"):
+        return x.size * x.dtype.itemsize
+    shape = sharding.shard_shape(x.shape)
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * x.dtype.itemsize
+
+
 def cache_report(cache, pool=None) -> dict:
     """Actual vs f32-equivalent bytes and the compression ratio.
 
@@ -145,6 +159,13 @@ def cache_report(cache, pool=None) -> dict:
     sum the references to them (what a non-sharing pool would hold),
     and the peaks record the trace high-water marks.  With no sharing
     the two columns are equal; their gap is the deduplication win.
+
+    ``per_device_bytes`` is the cache's footprint on ONE device, read
+    off each leaf's actual sharding (``shard_shape``): equal to
+    ``bytes`` on a single device or a replicated placement, and
+    ``arena/model_parallel`` + replicated metadata when the arena is
+    head-sharded over a mesh — the number the sharded serving
+    benchmark asserts drops ~linearly with the model-parallel degree.
     """
     leaves = tree_util.tree_leaves_with_path(cache)
     actual = sum(x.size * x.dtype.itemsize for _, x in leaves)
@@ -152,7 +173,8 @@ def cache_report(cache, pool=None) -> dict:
         x.size * 4 if _leaf_is_content(p, x) else x.size * x.dtype.itemsize
         for p, x in leaves)
     out = {"bytes": actual, "f32_bytes": f32,
-           "ratio": f32 / max(actual, 1)}
+           "ratio": f32 / max(actual, 1),
+           "per_device_bytes": sum(_shard_bytes(x) for _, x in leaves)}
     if pool is not None:
         out.update(
             physical_blocks=pool.in_use,

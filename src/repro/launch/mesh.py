@@ -7,6 +7,8 @@ import to materialize the placeholder devices.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 
@@ -18,7 +20,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model_parallel: int = 1):
-    """A mesh over whatever devices actually exist (examples / tests)."""
+    """A mesh over whatever devices actually exist (examples / tests).
+
+    ``model_parallel`` that does not divide the device count cannot
+    factor an ``(n // mp, mp)`` mesh; it is rounded DOWN to the largest
+    divisor of ``n`` (with a warning) instead of crashing
+    ``jax.make_mesh``."""
     n = len(jax.devices())
-    mp = max(1, min(model_parallel, n))
+    mp = max(1, min(int(model_parallel), n))
+    while n % mp:
+        mp -= 1
+    if mp != model_parallel:
+        warnings.warn(
+            f"model_parallel={model_parallel} does not factor the "
+            f"{n}-device host platform; rounding down to "
+            f"model_parallel={mp}", stacklevel=2)
     return jax.make_mesh((n // mp, mp), ("data", "model"))

@@ -58,6 +58,17 @@ host):
   PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
       --reduced --continuous --paged --chunked-prefill --batch 4 \
       --n-requests 16 --deadline-ms 400 --chunk-size 4
+
+``--model-parallel N`` serves tensor-parallel over a host mesh
+(``launch.mesh.make_host_mesh``): weights are placed by the
+``runtime/sharding.py`` rule table and the paged block arena is
+head-sharded over the 'model' axis, so each device holds
+``1/N``-th of the KV content (the report prints per-device KV bytes).
+Token streams are identical to the single-device run.  Multi-device
+CPU hosts are forced with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set it before
+launching); a degree that does not divide the device count rounds
+down with a warning.
 """
 from __future__ import annotations
 
@@ -144,11 +155,16 @@ def drive_trace(sched: Scheduler, trace, deadline_steps=None):
 
 def _build_engine(args, cfg, params, max_len):
     kernel = getattr(args, "decode_kernel", "gather")
+    mesh = None
+    if getattr(args, "model_parallel", 1) > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(args.model_parallel)
     return Engine(cfg, params, max_len=max_len,
                   temperature=args.temperature, seed=args.seed,
                   paged=args.paged, block_size=args.block_size,
                   n_blocks=args.n_blocks,
-                  decode_kernel=None if kernel == "gather" else kernel)
+                  decode_kernel=None if kernel == "gather" else kernel,
+                  mesh=mesh)
 
 
 def run_continuous(args, cfg, params):
@@ -198,6 +214,13 @@ def run_continuous(args, cfg, params):
               f"{args.batch * sched.table_width}); peak in use "
               f"{sched.pool.peak_in_use}, peak committed "
               f"{sched.peak_committed}")
+    if engine.mesh is not None:
+        mp = engine.mesh.shape.get("model", 1)
+        print(f"  sharded: mesh {dict(engine.mesh.shape)}; KV per "
+              f"device {rep['per_device_bytes']:,} of {rep['bytes']:,} "
+              f"bytes (model_parallel={mp}); step wall p50 "
+              f"{sched.stats['step_wall_p50_ms']:.1f} ms p99 "
+              f"{sched.stats['step_wall_p99_ms']:.1f} ms")
     if sched.chunked:
         print(f"  chunked prefill: {sched.prefill_tokens} prompt tokens "
               f"through the decode lane in {args.chunk_size}-token "
@@ -290,6 +313,15 @@ def main(argv=None):
                          "ms per step; drives EDF admission and "
                          "preemption-by-block-release (0 = best-effort "
                          "FIFO)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="tensor-parallel degree over a host device "
+                         "mesh: weights shard by the runtime/sharding "
+                         "rule table and the paged KV arena shards its "
+                         "head axis over 'model', so per-device KV "
+                         "bytes drop ~linearly; token streams are "
+                         "identical to the single-device run (force "
+                         "devices on CPU with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--prefix-share", type=float, default=0.0,
                     help="with --continuous: fraction of each prompt "
                          "drawn from ONE shared system prefix (0 = fully "

@@ -531,6 +531,33 @@ def paged_positions(frontier, table_width: int, block_size: int, *,
     return apos.reshape(b, w * bs)
 
 
+def _arena_head_constraint(x):
+    """Pin the head axis of dense paged-KV tensors to the 'model' mesh
+    axis: the arena is device_put with heads on 'model'
+    (``runtime/sharding.py::paged_cache_specs``), and this constraint on
+    the gathered/updated views keeps every paged read and write
+    shard-local — decode never all-gathers KV.  MLA latents (no head
+    axis, rank-3 views) pass through untouched, as does everything
+    outside a mesh context (same no-op contract as
+    ``_attn_context_parallel``).  When 'model' does not divide the head
+    count the arena itself fell back to replicated
+    (``paged_cache_specs``' filter), so the constraint is skipped too —
+    a mismatched pin would force GSPMD into full rematerializations."""
+    if x.ndim != 4:
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P, get_abstract_mesh
+        mesh = get_abstract_mesh()
+        n_model = dict(zip(mesh.axis_names, mesh.axis_sizes)).get("model", 1)
+        if n_model <= 1 or x.shape[2] % n_model:
+            return x
+        return lax.with_sharding_constraint(
+            x, P(None, None, "model", None))
+    except (ValueError, RuntimeError, TypeError, NameError,
+            AttributeError, ImportError):
+        return x
+
+
 def paged_gather(arena, tables):
     """arena (n_blocks, bs, ...) + tables (B, W) -> the row-contiguous
     virtual cache (B, W*bs, ...).  Sentinel entries clamp into an
@@ -539,7 +566,8 @@ def paged_gather(arena, tables):
     nb, bs = arena.shape[0], arena.shape[1]
     b, w = tables.shape
     g = jnp.take(arena, jnp.clip(tables, 0, nb - 1), axis=0)
-    return g.reshape((b, w * bs) + arena.shape[2:])
+    return _arena_head_constraint(
+        g.reshape((b, w * bs) + arena.shape[2:]))
 
 
 def paged_apos(tables, lens, block_size: int, n_blocks: int, *,
@@ -662,7 +690,8 @@ def paged_cache_update(arena, upd, tables, pos, ok, *, window: int = 0):
     phys = jnp.take_along_axis(
         tables, jnp.clip(slot, 0, w - 1)[:, None], axis=1)[:, 0]
     phys = jnp.where(ok, phys, nb)              # sentinel: scatter drops
-    return arena.at[phys, lax.rem(pos, bs)].set(upd, mode="drop")
+    return _arena_head_constraint(
+        arena.at[phys, lax.rem(pos, bs)].set(upd, mode="drop"))
 
 
 def paged_pack(arena, kvs, tables, lens, *, window: int = 0,

@@ -51,6 +51,7 @@ from jax import lax
 from repro.compress import kvcache as kvc
 from repro.models import get_family
 from repro.models.config import ModelConfig
+from repro.runtime import sharding as shd
 
 
 def sample_token(logits, key, temperature: float):
@@ -81,7 +82,8 @@ class Engine:
                  temperature: float = 0.0, seed: int = 0,
                  pad_id: int = 0, paged: bool = False,
                  block_size: int = 16, n_blocks: int = 0,
-                 sanitize: bool = False, decode_kernel: str = None):
+                 sanitize: bool = False, decode_kernel: str = None,
+                 mesh=None):
         """``paged=True`` swaps the dense preallocated cache for the
         block-table layout (transformer family only): prefill allocates
         arena blocks per row from a host-side ``BlockPool`` free list
@@ -96,7 +98,14 @@ class Engine:
         ``'gather'`` (jnp reference) or ``'fused'`` (the Pallas
         block-table-walk kernel, ``kernels/posit_paged_attn.py``);
         it threads through ``cfg.paged_attn_kernel`` so every jitted
-        decode program closes over the choice."""
+        decode program closes over the choice.
+        ``mesh`` (a ``jax.sharding.Mesh`` with a 'model' axis, e.g. from
+        ``launch.mesh.make_host_mesh``) serves tensor-parallel: the
+        weights are placed by the ``runtime/sharding.py`` rule table,
+        paged pool caches get head-sharded arenas via
+        :meth:`shard_cache`, and every dispatch runs inside the mesh
+        context so the model-side sharding constraints resolve.  Token
+        streams are identical to the mesh-less engine's."""
         if decode_kernel is not None:
             if decode_kernel not in ("gather", "fused"):
                 raise ValueError(
@@ -131,10 +140,38 @@ class Engine:
                 cfg, self.block_size, self.max_len)
             self.window_lane = L.paged_is_window_lane(
                 T._paged_window(cfg), self.block_size, self.table_width)
+        self.mesh = mesh
+        if mesh is not None:
+            # one-time placement: TP rules from the sharding table;
+            # every later dispatch sees committed sharded weights and
+            # compiles SPMD against them
+            self.params = jax.device_put(
+                params, shd.param_shardings(params, mesh))
         self.pool = None               # BlockPool of the last paged prefill
         self._key = jax.random.PRNGKey(seed)
         self._prefill_jit = {}
         self._decode_jit = {}
+
+    def shard_cache(self, cache):
+        """Place a paged pool cache on the engine mesh: dense arena
+        leaves head-sharded over 'model', MLA latents and metadata
+        replicated (``sharding.paged_cache_specs``).  Identity without
+        a mesh; a no-op for leaves already canonically placed — also
+        used between dispatches to keep the cache's shardings stable so
+        the serving loop never recompiles on a sharding change."""
+        if self.mesh is None:
+            return cache
+        return jax.device_put(
+            cache, shd.paged_cache_shardings(cache, self.mesh, self.cfg))
+
+    def _dispatch(self, fn, *args):
+        """Invoke a jitted callable inside the engine mesh context when
+        one is set, so ``PartitionSpec`` sharding constraints in the
+        model code resolve (they no-op without a mesh)."""
+        if self.mesh is None:
+            return fn(*args)
+        with shd.set_mesh(self.mesh):
+            return fn(*args)
 
     @property
     def n_compiles(self) -> int:
@@ -272,8 +309,10 @@ class Engine:
         fn = self._get_jit(self._prefill_jit, key,
                            lambda: self._prefill_fn(
                                ragged, tuple(sorted(kw)), n_blocks=nb))
-        cache, logits = fn(
-            self.params, jnp.asarray(tokens), jnp.asarray(lens), *args)
+        cache, logits = self._dispatch(
+            fn, self.params, jnp.asarray(tokens), jnp.asarray(lens), *args)
+        if use_paged:
+            cache = self.shard_cache(cache)
         return cache, logits, lens
 
     # ------------------------------------------------------------------
@@ -363,11 +402,11 @@ class Engine:
         key = ("mixed", int(c), int(n_steps))
         fn = self._get_jit(self._decode_jit, key,
                            lambda: self._mixed_fn(int(n_steps)))
-        cache, chunk_logits, toks, self._key = fn(
-            self.params, cache, chunk_tokens, jnp.asarray(nv),
+        cache, chunk_logits, toks, self._key = self._dispatch(
+            fn, self.params, cache, chunk_tokens, jnp.asarray(nv),
             jnp.asarray(tokens, jnp.int32), self._key,
             jnp.asarray(act), wt)
-        return cache, chunk_logits, toks
+        return self.shard_cache(cache), chunk_logits, toks
 
     # ------------------------------------------------------------------
     # prefix sharing: COW block copies + sanitizer poison (paged only)
@@ -390,8 +429,9 @@ class Engine:
 
         fn = self._get_jit(self._decode_jit, ("copy", len(src_ids)),
                            build)
-        return fn(cache, jnp.asarray(src_ids, jnp.int32),
-                  jnp.asarray(dst_ids, jnp.int32))
+        return self.shard_cache(self._dispatch(
+            fn, cache, jnp.asarray(src_ids, jnp.int32),
+            jnp.asarray(dst_ids, jnp.int32)))
 
     def poison_blocks(self, cache, ids):
         """Sanitizer device half: overwrite reclaimed arena blocks with
@@ -413,7 +453,8 @@ class Engine:
             return jax.jit(run)
 
         fn = self._get_jit(self._decode_jit, ("poison", len(ids)), build)
-        return fn(cache, jnp.asarray(ids, jnp.int32))
+        return self.shard_cache(self._dispatch(
+            fn, cache, jnp.asarray(ids, jnp.int32)))
 
     # ------------------------------------------------------------------
     # decode: one lax.scan == one compiled call for the whole generation
@@ -505,8 +546,10 @@ class Engine:
             else jnp.asarray(active, bool)
         fn = self._get_jit(self._decode_jit, ("chunk", int(n_steps)),
                            lambda: self._chunk_fn(int(n_steps)))
-        cache, toks, self._key = fn(
-            self.params, cache, tokens, self._key, active)
+        cache, toks, self._key = self._dispatch(
+            fn, self.params, cache, tokens, self._key, active)
+        if "block_tables" in cache:
+            cache = self.shard_cache(cache)
         return cache, toks
 
     def _check_fits(self, padded_len: int, max_new_tokens: int):
@@ -528,8 +571,8 @@ class Engine:
             reserve_tokens=max_new_tokens - 1)
         fn = self._get_jit(self._decode_jit, max_new_tokens,
                            lambda: self._decode_fn(max_new_tokens))
-        cache, toks, self._key = fn(
-            self.params, cache, logits, self._key)
+        cache, toks, self._key = self._dispatch(
+            fn, self.params, cache, logits, self._key)
         return GenerationResult(tokens=np.asarray(toks),
                                 prompt_lens=np.asarray(lens),
                                 prefill_logits=np.asarray(logits),
@@ -553,7 +596,8 @@ class Engine:
         tok, key = sample_token(logits, key, self.temperature)
         outs = [tok]
         for _ in range(max_new_tokens - 1):
-            step_logits, cache = step_fn(self.params, cache, tok)
+            step_logits, cache = self._dispatch(
+                step_fn, self.params, cache, tok)
             tok, key = sample_token(step_logits, key, self.temperature)
             outs.append(tok)
         self._key = key

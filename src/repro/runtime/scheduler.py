@@ -124,6 +124,7 @@ ratios transfer to hardware.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
@@ -243,9 +244,13 @@ class Scheduler:
                 self.n_slots * self.table_width
             self.pool = kvc.BlockPool(self.n_blocks,
                                       sanitize=self.sanitize)
-            self.cache = T.init_paged_cache(
+            # tensor-parallel engines place the arena head-sharded over
+            # 'model' here; one logical block id names one slice per
+            # shard, so the host-side pool/table bookkeeping below is
+            # identical with or without a mesh
+            self.cache = engine.shard_cache(T.init_paged_cache(
                 engine.cfg, self.n_slots, engine.max_len,
-                self.block_size, self.n_blocks)
+                self.block_size, self.n_blocks))
             self._window = T._paged_window(engine.cfg)
             self._tables = np.full(
                 (self.n_slots, self.table_width), self.n_blocks, np.int32)
@@ -293,6 +298,11 @@ class Scheduler:
         self._frontier = 0             # host mirror of cache["len"]
         self._next_rid = 0
         self.steps_run = 0             # decode steps executed (sim clock)
+        # real wall time per scheduling round (ms), measured around
+        # step(): the first half of the wall-clock-SLO roadmap item.
+        # Observability only — EDF/preemption still run on the
+        # decode-step sim clock (serve.MS_PER_STEP)
+        self._step_wall_ms: list = []
         self.n_chunks = 0
         self.n_admitted = 0
         self.n_retired = 0
@@ -371,11 +381,19 @@ class Scheduler:
     def stats(self) -> dict:
         """Counters for one serving run — notably ``n_compiles``, the
         engine's distinct-lowered-program count: flat after warmup in
-        chunked mode, growing with every new prompt length otherwise."""
+        chunked mode, growing with every new prompt length otherwise.
+        ``step_wall_p50_ms``/``step_wall_p99_ms`` are REAL per-round
+        wall times (0.0 before the first round); the sim clock
+        (``steps_run``) stays the scheduling time base."""
+        wall = np.asarray(self._step_wall_ms, np.float64)
         d = dict(
             n_admitted=self.n_admitted, n_retired=self.n_retired,
             n_preempted=self.n_preempted, n_chunks=self.n_chunks,
             steps_run=self.steps_run,
+            step_wall_p50_ms=float(np.percentile(wall, 50))
+            if wall.size else 0.0,
+            step_wall_p99_ms=float(np.percentile(wall, 99))
+            if wall.size else 0.0,
             prefill_tokens=self.prefill_tokens,
             prefix_hits=self.prefix_hits,
             prefix_matched_tokens=self.prefix_matched_tokens,
@@ -529,10 +547,10 @@ class Scheduler:
         block_ids[:now] = ids
         cap = min(self.engine.max_len, self._window) if self._window \
             else self.engine.max_len
-        self.cache = self._adopt_paged(
+        self.cache = self.engine.shard_cache(self._adopt_paged(
             self.cache, row_cache, jnp.int32(row),
             jnp.asarray(block_ids), window=self._window,
-            src_ring=plen > cap)
+            src_ring=plen > cap))
         self._tables[row] = block_ids
         self._row_blocks[row] = ids
         self._row_borrowed[row] = {}
@@ -769,7 +787,8 @@ class Scheduler:
         self._tables[i] = self.n_blocks          # sentinel
         mask = np.zeros((self.n_slots,), bool)
         mask[i] = True
-        self.cache = self._release(self.cache, jnp.asarray(mask))
+        self.cache = self.engine.shard_cache(
+            self._release(self.cache, jnp.asarray(mask)))
         if self.sanitize:
             if reclaimed:
                 self.cache = self.engine.poison_blocks(
@@ -911,8 +930,8 @@ class Scheduler:
                 # except under the sanitizer, which poisons them so a
                 # stale table entry detonates instead of silently
                 # serving freed KV
-                self.cache = self._release(self.cache,
-                                           jnp.asarray(done_mask))
+                self.cache = self.engine.shard_cache(
+                    self._release(self.cache, jnp.asarray(done_mask)))
                 if self.sanitize:
                     if reclaimed:
                         self.cache = self.engine.poison_blocks(
@@ -1016,9 +1035,19 @@ class Scheduler:
         streams identical to isolated generation and to the
         non-sharing paged path; writes reach a block only while its
         refcount is 1; reservation never lets extension or COW find
-        the pool empty."""
-        if self.chunked:
-            return self._step_chunked()
+        the pool empty.
+
+        Every round is wall-timed (``time.perf_counter``); ``stats``
+        surfaces the p50/p99 in milliseconds next to the sim clock."""
+        t0 = time.perf_counter()
+        try:
+            if self.chunked:
+                return self._step_chunked()
+            return self._step_unchunked()
+        finally:
+            self._step_wall_ms.append((time.perf_counter() - t0) * 1e3)
+
+    def _step_unchunked(self):
         self._admit()
         active = np.array(
             [s is not None and not s.done for s in self._slots], bool)

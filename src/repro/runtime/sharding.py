@@ -60,7 +60,29 @@ _TRANSFORMER_RULES = [
     (r"(enc|dec)_layers.*/wo/w$", P(None, "model", None)),
     (r"(enc|dec)_layers.*/mlp/wi/w$", P(None, None, "model")),
     (r"(enc|dec)_layers.*/mlp/wo/w$", P(None, "model", None)),
+    # projection biases: qkv/mlp-in biases shard with their matmul's
+    # output features; wo biases add AFTER the TP all-reduce, replicated
+    (r"(wq|wk|wv|wg|wi)/b$", P(None, "model")),
+    (r"(wo|cm_wv)/b$", P(None, None)),
+    # norms (scale/bias) are elementwise over the replicated residual
+    (r"(ln[0-9]?|ln_x|ln_out|norm)/(scale|bias)$", P(None, None)),
+    # rwkv mixing vectors + per-head decay/bonus, hymba ssm scalars:
+    # tiny per-channel state, replicated
+    (r"layers.*/(cm_maa_k|cm_maa_r|maa_x|w0|dt_bias|A_log|D)$",
+     P(None, None)),
+    (r"layers.*/maa_wkvrg$", P(None, None, None)),
+    (r"layers.*/u$", P(None, None, None)),
 ]
+
+
+def match_for_path(path_str: str):
+    """First rule matching ``path_str`` as ``(pattern, spec)``, or
+    ``None`` when no rule covers the path — the silent-replication
+    fallthrough ``tests/test_sharding_rules.py`` pins against."""
+    for pat, spec in _TRANSFORMER_RULES:
+        if re.search(pat, path_str):
+            return pat, spec
+    return None
 
 
 def _path_str(path) -> str:
@@ -76,12 +98,13 @@ def _path_str(path) -> str:
 
 
 def spec_for_path(path_str: str, ndim: int) -> P:
-    for pat, spec in _TRANSFORMER_RULES:
-        if re.search(pat, path_str):
-            if len(spec) == ndim:
-                return spec
-            # rank mismatch (e.g. bias): replicate
-            return P(*([None] * ndim))
+    hit = match_for_path(path_str)
+    if hit is not None:
+        _, spec = hit
+        if len(spec) == ndim:
+            return spec
+        # rank mismatch (e.g. an unstacked top-level norm): replicate
+        return P(*([None] * ndim))
     return P(*([None] * ndim))
 
 
@@ -208,6 +231,39 @@ def cache_specs(cache_shape, mesh: Mesh, cfg: ModelConfig,
             spec = P(*([None] * nd))
         return filter_spec(spec, leaf.shape, mesh)
     return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def paged_cache_specs(cache_shape, mesh: Mesh, cfg: ModelConfig):
+    """Specs for the PAGED pool cache (block arena + tables).
+
+    The arena reuses the dense cache's leaf names but NOT its axis
+    semantics — axis 1 is the block id and axis 2 the in-block slot, so
+    ``cache_specs``'s sequence-over-'model' rule would shard the
+    16-wide block_size axis.  Blocks are head-partitioned instead:
+
+      dense arena  (L, nb, bs, G, hd) -> (None, None, None, 'model', None)
+      MLA latents  (L, nb, bs, r)     -> replicated (no head axis)
+      metadata     block_tables/lens/max_len -> replicated (host-mirrored)
+
+    One logical block id therefore names one slice per shard — the
+    host-side ``BlockPool`` free list stays shard-agnostic, and
+    refcount/COW/sanitizer semantics carry over unchanged.
+    ``filter_spec`` drops the 'model' axis when it does not divide the
+    KV head count (explicit placement needs exact divisibility).
+    """
+    def one(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name in ("k", "v") and nd == 5:
+            spec = P(None, None, None, "model", None)
+        else:
+            spec = P(*([None] * nd))
+        return filter_spec(spec, leaf.shape, mesh)
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def paged_cache_shardings(cache_shape, mesh: Mesh, cfg: ModelConfig):
+    return to_shardings(paged_cache_specs(cache_shape, mesh, cfg), mesh)
 
 
 def to_shardings(spec_tree, mesh: Mesh):

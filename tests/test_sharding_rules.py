@@ -1,0 +1,138 @@
+"""The sharding rule table must cover every param path of every family.
+
+``runtime/sharding.py`` maps param paths to PartitionSpecs by regex,
+first match wins — and an UNMATCHED path silently replicates, which is
+exactly how a new projection ends up fully materialized on every TP
+shard without anyone noticing.  These tests pin the covenant: every
+leaf of every registered family matches a rule, and the only tolerated
+rank mismatches (unstacked top-level norms hitting the stacked-norm
+rule) are ones whose spec is fully replicated anyway, so no 'model'
+placement is ever dropped by accident.
+
+Also golden-pins the cache spec tables: the DENSE cache shards the KV
+sequence axis over 'model' (context parallelism) while the PAGED arena
+shards the head axis — same leaf names, different axis semantics — and
+``make_host_mesh`` rounds a non-dividing tensor-parallel degree down
+with a warning instead of crashing.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import make_host_mesh
+from repro.models import get_family
+from repro.runtime import sharding as shd
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _param_paths(arch):
+    cfg = configs.get_config(arch).reduced(compute_dtype="float32")
+    fam = get_family(cfg)
+    shapes = jax.eval_shape(lambda k: fam.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    return jax.tree_util.tree_flatten_with_path(shapes)[0]
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_every_param_path_matches_a_rule(arch):
+    missing = [shd._path_str(path)
+               for path, leaf in _param_paths(arch)
+               if shd.match_for_path(shd._path_str(path)) is None]
+    assert not missing, (
+        f"{arch}: param paths with NO sharding rule (these would "
+        f"silently replicate on every TP shard): {missing}")
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_rank_mismatch_never_drops_a_model_placement(arch):
+    # spec_for_path replicates on rank mismatch; that fallback is only
+    # safe when the matched rule wanted replication in the first place
+    for path, leaf in _param_paths(arch):
+        ps = shd._path_str(path)
+        pat, spec = shd.match_for_path(ps)
+        if len(spec) != len(leaf.shape):
+            assert all(e is None for e in spec), (
+                f"{arch}: {ps} (shape {leaf.shape}) matched rule "
+                f"{pat!r} of rank {len(spec)} carrying a mesh axis — "
+                f"the rank-mismatch fallback would silently drop it")
+
+
+def test_match_for_path_can_miss():
+    # the coverage test above is vacuous if the matcher never misses
+    assert shd.match_for_path("no/such/param") is None
+
+
+class _FakeMesh:
+    """Duck-typed mesh for spec goldens: filter_spec / batch_axes only
+    read ``axis_names`` and ``shape``, so divisibility rules can be
+    exercised without 8 real devices."""
+    axis_names = ("data", "model")
+    shape = {"data": 2, "model": 4}
+
+
+def _cfg():
+    return configs.get_config("phi3-medium-14b").reduced(
+        compute_dtype="float32")
+
+
+def test_dense_cache_spec_shards_sequence_axis():
+    # dense KV (L, B, T, G, hd): 'model' rides the SEQUENCE axis
+    specs = shd.cache_specs(
+        {"k": SDS((2, 3, 16, 4, 8), jnp.float32),
+         "v": SDS((2, 3, 16, 4, 8), jnp.float32),
+         "len": SDS((), jnp.int32)},
+        _FakeMesh(), _cfg())
+    assert specs["k"] == P(None, None, "model", None, None)
+    assert specs["v"] == P(None, None, "model", None, None)
+    assert specs["len"] == P()
+
+
+def test_paged_cache_spec_shards_head_axis():
+    # paged arena (L, nb, bs, G, hd): axis 1 is the block id and axis 2
+    # the in-block slot, so 'model' must ride the HEAD axis instead;
+    # MLA latents (no head axis) and block-table metadata replicate
+    specs = shd.paged_cache_specs(
+        {"k": SDS((2, 8, 4, 4, 8), jnp.float32),
+         "v": SDS((2, 8, 4, 4, 8), jnp.float32),
+         "c_kv": SDS((2, 8, 4, 6), jnp.float32),
+         "k_rope": SDS((2, 8, 4, 8), jnp.float32),
+         "block_tables": SDS((3, 5), jnp.int32),
+         "lens": SDS((3,), jnp.int32),
+         "max_len": SDS((), jnp.int32)},
+        _FakeMesh(), _cfg())
+    assert specs["k"] == P(None, None, None, "model", None)
+    assert specs["v"] == P(None, None, None, "model", None)
+    for name in ("c_kv", "k_rope", "block_tables", "lens", "max_len"):
+        assert all(e is None for e in specs[name]), (
+            f"{name} must replicate, got {specs[name]}")
+
+
+def test_paged_cache_spec_replicates_non_dividing_heads():
+    # 2 KV heads on a 'model'=4 mesh: explicit placement needs exact
+    # divisibility, so the filter falls back to replication rather
+    # than letting device_put crash
+    specs = shd.paged_cache_specs(
+        {"k": SDS((2, 8, 4, 2, 8), jnp.float32)}, _FakeMesh(), _cfg())
+    assert all(e is None for e in specs["k"])
+
+
+def test_make_host_mesh_rounds_down_and_warns():
+    n = len(jax.devices())
+    with pytest.warns(UserWarning, match="rounding down"):
+        mesh = make_host_mesh(n + 3)       # can never divide n
+    assert mesh.shape["model"] <= n
+    assert n % mesh.shape["model"] == 0
+    assert mesh.shape["data"] * mesh.shape["model"] == n
+
+
+def test_make_host_mesh_exact_degree_is_silent():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        mesh = make_host_mesh(1)
+    assert not [x for x in w if "rounding down" in str(x.message)]
+    assert mesh.shape["model"] == 1

@@ -391,6 +391,81 @@ def test_pvu006_waiver(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# PVU007 — cache/arena placed or created without sharding machinery
+# ---------------------------------------------------------------------------
+
+# the implicit-replication class the sharded arena PR exists to prevent:
+# a bare device_put of the cache lands a full copy on EVERY device
+BAD_BARE_DEVICE_PUT = """
+    import jax
+
+    def adopt(cache):
+        return jax.device_put(cache)
+"""
+
+BAD_FRESH_ARENA = """
+    import jax.numpy as jnp
+
+    def grow_pool(cfg, nb, bs):
+        arena = jnp.zeros((cfg.n_layers, nb, bs, 4, 8), jnp.float32)
+        return arena
+"""
+
+
+def test_pvu007_fires_on_bare_device_put_in_runtime(tmp_path):
+    active, _ = _run(tmp_path, BAD_BARE_DEVICE_PUT,
+                     filename="runtime/adopt.py")
+    assert _ids(active) == ["PVU007"]
+
+
+def test_pvu007_fires_on_fresh_arena_outside_init(tmp_path):
+    active, _ = _run(tmp_path, BAD_FRESH_ARENA,
+                     filename="models/pool.py")
+    assert _ids(active) == ["PVU007"]
+
+
+def test_pvu007_silent_outside_runtime_and_models(tmp_path):
+    # kernels/benchmarks/tests build throwaway arenas on purpose
+    active, _ = _run(tmp_path, BAD_BARE_DEVICE_PUT,
+                     filename="kernels/scratch.py")
+    assert active == []
+
+
+def test_pvu007_silent_on_sharded_placement_and_init(tmp_path):
+    active, _ = _run(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+        from repro.runtime import sharding as shd
+
+        def shard_cache(cache, mesh, cfg):
+            return jax.device_put(
+                cache, shd.paged_cache_shardings(cache, mesh, cfg))
+
+        def init_paged_cache(cfg, nb, bs):
+            # sanctioned constructor: the engine places its output
+            arena = jnp.zeros((cfg.n_layers, nb, bs, 4, 8), jnp.float32)
+            return {"k": arena}
+
+        def resize(cache, mesh):
+            # creating next to a with_sharding_constraint is fine too
+            arena = jnp.zeros_like(cache["k"])
+            return jax.lax.with_sharding_constraint(arena, None)
+    """, filename="runtime/engine2.py")
+    assert active == []
+
+
+def test_pvu007_waiver(tmp_path):
+    active, waived = _run(tmp_path, """
+        import jax
+
+        def debug_snapshot(cache):
+            # host-side debugging copy; never enters the serving path
+            return jax.device_put(cache)  # positcheck: disable=PVU007
+    """, filename="runtime/debug.py")
+    assert active == [] and _ids(waived) == ["PVU007"]
+
+
+# ---------------------------------------------------------------------------
 # framework behaviour
 # ---------------------------------------------------------------------------
 
@@ -418,7 +493,7 @@ def test_waiver_on_other_line_does_not_suppress(tmp_path):
 def test_rule_registry_is_complete():
     ids = [r.id for r in ALL_RULES]
     assert ids == ["PVU001", "PVU002", "PVU003", "PVU004", "PVU005",
-                   "PVU006"]
+                   "PVU006", "PVU007"]
     for rid in ids:
         r = rule_by_id(rid)
         assert r.severity in ("error", "warning")
@@ -466,5 +541,5 @@ def test_cli_list_rules():
         cwd=REPO, env=_analysis_env(), capture_output=True, text=True)
     assert proc.returncode == 0
     for rid in ("PVU001", "PVU002", "PVU003", "PVU004", "PVU005",
-                "PVU006"):
+                "PVU006", "PVU007"):
         assert rid in proc.stdout
